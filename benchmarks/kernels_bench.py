@@ -1,0 +1,83 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU measures the
+*reference semantics*; us_per_call here tracks wrapper/oracle overhead and
+regression, not TPU latency — TPU numbers come from the roofline model)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro.kernels import ops, ref
+
+
+def _timeit(fn, *args, iters=5) -> float:
+    fn(*args)  # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    d, n = 8192, 2048
+    w = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    dmat = jnp.asarray(rng.normal(size=(d, n)).astype(np.float32))
+    rows.append([
+        "fd_matvec_ref_8192x2048",
+        f"{_timeit(jax.jit(lambda a, b: ref.fd_matvec_ref(a[:, None], b)), w, dmat):.1f}",
+        "jnp oracle",
+    ])
+
+    s = jnp.asarray(rng.normal(size=65536).astype(np.float32))
+    y = jnp.sign(s) + (jnp.sign(s) == 0)
+    rows.append([
+        "logistic_grad_ref_65536",
+        f"{_timeit(jax.jit(ref.logistic_grad_ref), s, y):.1f}",
+        "jnp oracle",
+    ])
+
+    wv = jnp.asarray(rng.normal(size=262144).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=262144).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=262144).astype(np.float32))
+    rows.append([
+        "svrg_update_ref_262144",
+        f"{_timeit(jax.jit(lambda a, b, c: ref.svrg_update_ref(a, b, c, eta=0.1, lam=1e-4)), wv, g, z):.1f}",
+        "jnp oracle",
+    ])
+
+    q = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(4096, 2, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(4096, 2, 64)).astype(np.float32))
+    rows.append([
+        "flash_decode_ref_4096",
+        f"{_timeit(jax.jit(lambda a, b, c: ref.flash_decode_ref(a, b, c, length=4000)), q, k, v):.1f}",
+        "jnp oracle",
+    ])
+    # interpret-mode kernel sanity timing (NOT a TPU number)
+    rows.append([
+        "flash_decode_pallas_interp_4096",
+        f"{_timeit(lambda a, b, c: ops.decode_attention(a, b, c, length=4000, interpret=True), q, k, v):.1f}",
+        "pallas interpret=True",
+    ])
+
+    path = write_csv("kernels_micro.csv", ["name", "us_per_call", "derived"], rows)
+    return path, rows
+
+
+def main():
+    path, rows = run()
+    print(f"kernels: wrote {len(rows)} rows to {path}")
+    for r in rows:
+        print("  ", ",".join(map(str, r)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Roofline table: renders results/dryrun/*.json into the EXPERIMENTS.md
+§Roofline table (one row per arch x shape x mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import write_csv
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_results() -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(os.path.abspath(DRYRUN_DIR), "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run():
+    rows = []
+    for r in load_results():
+        if not r.get("ok"):
+            rows.append([r.get("arch"), r.get("shape"), r.get("mesh"),
+                         "FAIL", "", "", "", "", "", r.get("error", "")[:120]])
+            continue
+        rl = r.get("roofline")
+        if not rl:  # multi-pod proof row: lower+compile only
+            rows.append([
+                r["arch"], r["shape"], r["mesh"], "proof", "", "", "", "", "",
+                f"compiled in {r.get('compile_s', '?')}s",
+            ])
+            continue
+        ratio = r.get("useful_flops_ratio")
+        rows.append([
+            r["arch"], r["shape"], r["mesh"],
+            f"{rl['compute_s']:.5f}", f"{rl['memory_s']:.5f}",
+            f"{rl['collective_s']:.5f}", rl["dominant"],
+            f"{r.get('model_flops', 0):.3e}",
+            f"{ratio:.3f}" if ratio else "",
+            f"temp={r.get('memory_analysis', {}).get('temp_size_in_bytes', 0)/2**30:.2f}GiB",
+        ])
+    path = write_csv(
+        "roofline_table.csv",
+        ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+         "dominant", "model_flops", "useful_flops_ratio", "memory"],
+        rows,
+    )
+    return path, rows
+
+
+def markdown_table() -> str:
+    _, rows = run()
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | MODEL_FLOPS | useful ratio | mem |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append("| " + " | ".join(str(c) for c in r) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    path, rows = run()
+    print(f"roofline: wrote {len(rows)} rows to {path}")
+    ok = sum(1 for r in rows if r[3] != "FAIL")
+    print(f"  {ok}/{len(rows)} combos OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract;
+full tables land in results/benchmarks/*.csv.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small datasets only")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        convergence,
+        kernels_bench,
+        lambda_sensitivity,
+        roofline,
+        scalability,
+        speedup,
+    )
+
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+
+    def stamp(name, t_start, derived):
+        us = (time.perf_counter() - t_start) * 1e6
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+    t = time.perf_counter()
+    _, rows = convergence.run(quick=args.quick)
+    stamp("fig6_fig7_convergence", t, f"{len(rows)} rows")
+
+    t = time.perf_counter()
+    _, rows, summary = speedup.run(quick=args.quick)
+    fd_vs_ds = [r for r in rows if r[1] == "speedup_vs_dsvrg"]
+    stamp("tab2_speedup_vs_dsvrg", t,
+          ";".join(f"{r[0]}={r[3]}" for r in fd_vs_ds))
+    fd_vs_ps = [r for r in rows if r[1] == "speedup_vs_pslite_sgd"]
+    print(f"tab3_speedup_vs_pslite,0," + ";".join(f"{r[0]}={r[3]}" for r in fd_vs_ps))
+
+    t = time.perf_counter()
+    _, rows = lambda_sensitivity.run()
+    stamp("fig8_lambda_sensitivity", t, f"{len(rows)} rows")
+
+    t = time.perf_counter()
+    _, rows, times = scalability.run()
+    stamp("fig9_scalability", t,
+          ";".join(f"q{q}={times[1]/times[q]:.2f}x" for q in (1, 4, 8, 16)))
+
+    t = time.perf_counter()
+    _, rows = kernels_bench.run()
+    for r in rows:
+        print(",".join(map(str, r)))
+    stamp("kernels_micro_total", t, f"{len(rows)} kernels")
+
+    t = time.perf_counter()
+    _, rows = roofline.run()
+    ok = sum(1 for r in rows if r and r[3] != "FAIL")
+    stamp("roofline_table", t, f"{ok}/{len(rows)} dryrun combos OK")
+
+    print(f"total_benchmark_wall,{(time.perf_counter()-t0)*1e6:.0f},seconds="
+          f"{time.perf_counter()-t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

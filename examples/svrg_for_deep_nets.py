@@ -1,0 +1,69 @@
+"""Beyond-paper: the paper's optimizer (SVRG) applied to a deep LM.
+
+The paper notes (§1) that the feature-distributed framework "can also be
+applied to SGD and other variants ... and other linear models"; this
+example goes one step further and runs variance-reduced training on a
+transformer, using the framework's optim.svrg wrapper: an anchor snapshot
+plus a periodically refreshed large-batch gradient, with the inner steps
+using the control variate g(w) - g(w̃) + z.
+
+    PYTHONPATH=src python examples/svrg_for_deep_nets.py
+"""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import PipelineConfig, batches
+from repro.models import transformer
+from repro.optim import optimizers
+from repro.sharding.specs import unsharded_ctx
+from repro.train.loop import TrainSettings, loss_fn
+
+ANCHOR_EVERY = 20
+STEPS = 100
+
+
+def main():
+    cfg = reduced_config(get_config("smollm-360m"))
+    ctx = unsharded_ctx()
+    settings = TrainSettings()
+    base = optimizers.sgd(0.05)
+    opt = optimizers.svrg(base)
+
+    params = transformer.init_params(cfg, jax.random.key(0), tp=1)
+    params = jax.tree.map(
+        lambda p: p.astype(jnp.float32) if p.dtype == jnp.bfloat16 else p, params
+    )
+    state = opt.init(params)
+
+    grad_of = jax.jit(
+        jax.grad(lambda p, b: loss_fn(p, cfg, b, ctx, settings)[0])
+    )
+    loss_of = jax.jit(lambda p, b: loss_fn(p, cfg, b, ctx, settings)[0])
+
+    it = batches(cfg, PipelineConfig(4, 32, seed=0))
+    anchor_batch = {k: jnp.asarray(v) for k, v in next(batches(cfg, PipelineConfig(16, 32, seed=99))).items()}
+
+    losses = []
+    for i in range(STEPS):
+        if i % ANCHOR_EVERY == 0:
+            z = grad_of(params, anchor_batch)  # large-batch anchor gradient
+            state = optimizers.svrg_refresh(state, params, z)
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        g_cur = grad_of(params, batch)
+        g_anc = grad_of(state.anchor_params, batch)
+        updates, state = opt.update((g_cur, g_anc), state, params)
+        params = optimizers.apply_updates(params, updates)
+        losses.append(float(loss_of(params, batch)))
+        if (i + 1) % 20 == 0:
+            print(f"step {i+1:3d}  loss={losses[-1]:.4f}", flush=True)
+    assert losses[-1] < losses[0], "SVRG-on-LM did not learn"
+    print(f"\nloss {losses[0]:.4f} -> {losses[-1]:.4f} with variance-reduced steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps with the framework's full stack (pipeline -> model -> train loop ->
+checkpoint), on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--tiny]
+
+``--tiny`` drops to the smoke-scale model for CI-speed runs; the default
+builds a ~100M-parameter llama-style model (smollm-360m geometry, shortened
+stack) which is the "train a ~100M model for a few hundred steps" example
+from the deliverables.
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import PipelineConfig, batches
+from repro.optim import optimizers
+from repro.sharding.specs import unsharded_ctx
+from repro.train.loop import TrainSettings, init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ck")
+    args = ap.parse_args()
+
+    base = get_config("smollm-360m")
+    if args.tiny:
+        cfg = reduced_config(base)
+    else:
+        # ~100M params: smollm-360m geometry at 8 layers, fp32 for CPU speed
+        cfg = dataclasses.replace(
+            base, name="smollm-100m", num_layers=8, dtype="float32",
+        )
+    ctx = unsharded_ctx()
+    opt = optimizers.adamw(1e-3, weight_decay=0.01)
+    state = init_state(cfg, jax.random.key(0), opt, tp=1)
+    n_params = sum(p.size for p in jax.tree.leaves(state["params"]))
+    print(f"model {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{cfg.num_layers} layers, d_model={cfg.d_model}")
+
+    step = jax.jit(make_train_step(cfg, ctx, opt, TrainSettings()))
+    it = batches(cfg, PipelineConfig(args.batch, args.seq, seed=0))
+
+    losses_seen = []
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, metrics = step(state, batch)
+        losses_seen.append(float(metrics["ce"]))
+        if (i + 1) % 25 == 0:
+            dt = (time.perf_counter() - t0) / (i + 1)
+            print(f"step {i+1:4d}  ce={losses_seen[-1]:.4f}  ({dt:.2f}s/step)",
+                  flush=True)
+
+    ckpt.save(args.ckpt, state)
+    print(f"\nfirst-25 mean ce: {sum(losses_seen[:25])/25:.4f}")
+    print(f"last-25  mean ce: {sum(losses_seen[-25:])/25:.4f}")
+    assert sum(losses_seen[-25:]) < sum(losses_seen[:25]), "did not learn!"
+    print(f"checkpoint: {args.ckpt}.npz — done.")
+
+
+if __name__ == "__main__":
+    main()

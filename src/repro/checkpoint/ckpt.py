@@ -1,0 +1,63 @@
+"""Checkpointing: flat-npz with pytree structure + sharding metadata.
+
+Orbax would be the production choice; this container implements the same
+contract directly: save/restore round-trips the full train state
+(params, optimizer, step) and records the PartitionSpec of every leaf so a
+restore onto a different mesh can re-shard deterministically.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(state):
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    return leaves, treedef
+
+
+def save(path: str, state, specs=None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(state)[0]
+    arrays = {}
+    meta = {"keys": [], "specs": {}}
+    for kp, leaf in flat:
+        key = jax.tree_util.keystr(kp)
+        meta["keys"].append(key)
+        arrays[f"arr_{len(arrays)}"] = np.asarray(leaf)
+    if specs is not None:
+        spec_flat = jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )[0]
+        meta["specs"] = {
+            jax.tree_util.keystr(kp): str(s) for kp, s in spec_flat
+        }
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    with np.load(path + ".npz") as data:
+        arrays = [data[f"arr_{i}"] for i in range(len(data.files))]
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(arrays) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(arrays)} leaves, template has {len(leaves)}"
+        )
+    restored = [
+        jnp.asarray(a, dtype=l.dtype) if hasattr(l, "dtype") else a
+        for a, l in zip(arrays, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def load_meta(path: str) -> dict:
+    with open(path + ".json") as f:
+        return json.load(f)

@@ -1,0 +1,27 @@
+"""The paper's own model configs: L2-regularized logistic regression on the
+four Table-1 data sets, solved with FD-SVRG (eq. 5)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearConfig:
+    name: str
+    dataset: str  # repro.data.datasets key
+    loss: str = "logistic"
+    reg: str = "l2"
+    lam: float = 1e-4  # paper §5.3 default
+    eta: float = 0.25
+    batch_size: int = 1  # paper default; §4.4.1 mini-batch is a flag
+    workers: int = 16  # paper: 8 for news20, 16 otherwise
+    outer_iters: int = 10
+
+
+CONFIGS = {
+    "fdsvrg-news20": LinearConfig("fdsvrg-news20", "news20", workers=8),
+    "fdsvrg-url": LinearConfig("fdsvrg-url", "url"),
+    "fdsvrg-webspam": LinearConfig("fdsvrg-webspam", "webspam"),
+    "fdsvrg-kdd2010": LinearConfig("fdsvrg-kdd2010", "kdd2010"),
+}

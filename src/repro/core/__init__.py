@@ -1,0 +1,31 @@
+"""The paper's contribution: FD-SVRG and its comparison baselines."""
+
+from repro.core import losses
+from repro.core.comm import ClusterModel, CommMeter, TpuV5eModel
+from repro.core.fdsvrg import (
+    RunResult,
+    SVRGConfig,
+    full_gradient,
+    objective,
+    run_fdsvrg,
+    run_serial_svrg,
+    fdsvrg_worker_simulation,
+)
+from repro.core.partition import FeaturePartition, balanced, by_nnz
+
+__all__ = [
+    "losses",
+    "ClusterModel",
+    "CommMeter",
+    "TpuV5eModel",
+    "RunResult",
+    "SVRGConfig",
+    "full_gradient",
+    "objective",
+    "run_fdsvrg",
+    "run_serial_svrg",
+    "fdsvrg_worker_simulation",
+    "FeaturePartition",
+    "balanced",
+    "by_nnz",
+]

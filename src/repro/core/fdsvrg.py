@@ -1,0 +1,419 @@
+"""FD-SVRG (paper Algorithm 1) and serial SVRG (paper Algorithm 2).
+
+Three implementations, one update rule:
+
+* :func:`run_serial_svrg` — Algorithm 2 (Johnson & Zhang), options I/II,
+  jitted ``lax.scan`` inner loop.  This is the reference the paper proves
+  FD-SVRG equivalent to.
+* :func:`run_fdsvrg` — Algorithm 1 at simulation level: numerics follow
+  the feature-decomposed computation (margins as a sum of per-block
+  partials), communication is metered with the paper's exact accounting
+  (tree reduce+broadcast per inner product), wall-clock is modeled with
+  :class:`~repro.core.comm.ClusterModel`.
+* :func:`fdsvrg_worker_simulation` — an explicit q-worker object-level
+  simulation (each worker only ever touches its own ``w^(l)`` and
+  ``D^(l)``); slow, used by tests to certify exact equivalence.
+
+The deployable TPU version (shard_map over the ``model`` mesh axis) lives
+in :mod:`repro.core.fdsvrg_shardmap`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses as losses_lib
+from repro.core.comm import ClusterModel, CommMeter
+from repro.core.partition import FeaturePartition
+from repro.core.tree_reduce import simulate_tree_sum
+from repro.data.sparse import (
+    PaddedCSR,
+    margins,
+    margins_block,
+    scatter_grad,
+    scatter_grad_block,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SVRGConfig:
+    eta: float
+    inner_steps: int  # M; paper sets M = #instances held per worker (= N for FD)
+    outer_iters: int
+    batch_size: int = 1  # u, the mini-batch trick of §4.4.1
+    option: str = "I"  # paper proves Option I (Theorem 1) and uses it
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.option not in ("I", "II"):
+            raise ValueError(f"option must be 'I' or 'II', got {self.option!r}")
+        if self.batch_size < 1:
+            raise ValueError("batch_size >= 1 required")
+
+
+@dataclasses.dataclass
+class OuterRecord:
+    outer: int
+    objective: float
+    grad_norm: float
+    comm_scalars: int
+    comm_rounds: int
+    modeled_time_s: float
+    wall_time_s: float
+
+
+@dataclasses.dataclass
+class RunResult:
+    w: jax.Array
+    history: list[OuterRecord]
+    meter: CommMeter
+
+    def objectives(self) -> np.ndarray:
+        return np.array([h.objective for h in self.history])
+
+    def final_objective(self) -> float:
+        return self.history[-1].objective
+
+
+# ---------------------------------------------------------------------------
+# Objective / full gradient
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name"))
+def _objective_impl(indices, values, labels, w, lam, loss_name, reg_name):
+    loss = losses_lib.LOSSES[loss_name]
+    reg = losses_lib.Regularizer(reg_name, lam)
+    s = jnp.sum(w[indices] * values, axis=1)
+    return jnp.mean(loss.value(s, labels)) + reg.value(w)
+
+
+def objective(
+    data: PaddedCSR, w: jax.Array, loss: losses_lib.MarginLoss, reg: losses_lib.Regularizer
+) -> float:
+    return float(
+        _objective_impl(
+            data.indices, data.values, data.labels, w, reg.lam, loss.name, reg.name
+        )
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name",))
+def _full_grad_impl(indices, values, labels, w, loss_name):
+    """Data part of the full gradient plus the cached margins s0 = w^T x_i."""
+    loss = losses_lib.LOSSES[loss_name]
+    s0 = jnp.sum(w[indices] * values, axis=1)
+    coeffs = loss.dvalue(s0, labels) / labels.shape[0]
+    z_data = scatter_grad(indices, values, coeffs, w.shape[0])
+    return z_data, s0
+
+
+def full_gradient(
+    data: PaddedCSR, w: jax.Array, loss: losses_lib.MarginLoss
+) -> tuple[jax.Array, jax.Array]:
+    return _full_grad_impl(data.indices, data.values, data.labels, w, loss.name)
+
+
+# ---------------------------------------------------------------------------
+# Inner epoch (shared by serial and simulated-FD paths)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("loss_name", "reg_name", "num_blocks", "bounds")
+)
+def _inner_epoch(
+    indices,
+    values,
+    labels,
+    w0,
+    z_data,
+    s0,
+    samples,  # int32[M, u]
+    eta,
+    lam,
+    step_mask,  # float32[M] (1 = apply update; Option II masks the tail)
+    loss_name: str,
+    reg_name: str,
+    num_blocks: int,
+    bounds: tuple[int, ...] | None,
+):
+    """M variance-reduced updates.
+
+    When ``num_blocks > 1`` the margin of each sampled instance is computed
+    the feature-distributed way: q per-block partial dots summed in block
+    order (matching the tree reduce), certifying the decomposition the
+    paper relies on.  ``num_blocks == 1`` is the serial path.
+    """
+    loss = losses_lib.LOSSES[loss_name]
+    reg = losses_lib.Regularizer(reg_name, lam)
+    u = samples.shape[1]
+    n = labels.shape[0]
+
+    def margin_of(w, idx, val):
+        if num_blocks == 1:
+            return jnp.sum(w[idx] * val, axis=-1)
+        parts = []
+        for l in range(num_blocks):
+            lo, hi = bounds[l], bounds[l + 1]
+            block = jax.lax.slice_in_dim(w, lo, hi)
+            parts.append(margins_block(idx, val, block, lo))
+        # Tree-order summation (pairwise), mirroring Figure 5 exactly.
+        acc = list(parts)
+        stride = 1
+        while stride < num_blocks:
+            k = 0
+            while k + stride < num_blocks:
+                acc[k] = acc[k] + acc[k + stride]
+                k += 2 * stride
+            stride *= 2
+        return acc[0]
+
+    def step(w, inp):
+        ids, mask = inp  # ids: int32[u]
+        idx = indices[ids]  # [u, nnz]
+        val = values[ids]
+        y = labels[ids]
+        s_m = margin_of(w, idx, val)
+        s_anchor = s0[ids]
+        coef = (loss.dvalue(s_m, y) - loss.dvalue(s_anchor, y)) / u
+        data_grad = scatter_grad(idx, val, coef, w.shape[0])
+        g = data_grad + z_data + reg.grad(w)
+        return w - (eta * mask) * g, None
+
+    w_final, _ = jax.lax.scan(step, w0, (samples, step_mask))
+    return w_final
+
+
+def _draw_samples(rng: np.random.Generator, n: int, m: int, u: int) -> np.ndarray:
+    return rng.integers(0, n, size=(m, u), dtype=np.int64).astype(np.int32)
+
+
+def _option_mask(rng: np.random.Generator, m: int, option: str) -> np.ndarray:
+    if option == "I":
+        return np.ones(m, dtype=np.float32)
+    stop = int(rng.integers(1, m + 1))
+    return (np.arange(m) < stop).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serial SVRG (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def run_serial_svrg(
+    data: PaddedCSR,
+    loss: losses_lib.MarginLoss,
+    reg: losses_lib.Regularizer,
+    cfg: SVRGConfig,
+) -> RunResult:
+    rng = np.random.default_rng(cfg.seed)
+    w = jnp.zeros((data.dim,), dtype=data.values.dtype)
+    meter = CommMeter()  # serial: stays empty
+    history: list[OuterRecord] = []
+    t_start = time.perf_counter()
+    for t in range(cfg.outer_iters):
+        z_data, s0 = full_gradient(data, w, loss)
+        samples = _draw_samples(rng, data.num_instances, cfg.inner_steps, cfg.batch_size)
+        mask = _option_mask(rng, cfg.inner_steps, cfg.option)
+        w = _inner_epoch(
+            data.indices,
+            data.values,
+            data.labels,
+            w,
+            z_data,
+            s0,
+            jnp.asarray(samples),
+            cfg.eta,
+            reg.lam,
+            jnp.asarray(mask),
+            loss.name,
+            reg.name,
+            1,
+            None,
+        )
+        obj = objective(data, w, loss, reg)
+        gnorm = float(jnp.linalg.norm(z_data + reg.grad(w)))
+        history.append(
+            OuterRecord(t, obj, gnorm, 0, 0, 0.0, time.perf_counter() - t_start)
+        )
+    return RunResult(w=w, history=history, meter=meter)
+
+
+# ---------------------------------------------------------------------------
+# FD-SVRG (Algorithm 1), metered simulation
+# ---------------------------------------------------------------------------
+
+
+def run_fdsvrg(
+    data: PaddedCSR,
+    partition: FeaturePartition,
+    loss: losses_lib.MarginLoss,
+    reg: losses_lib.Regularizer,
+    cfg: SVRGConfig,
+    cluster: ClusterModel | None = None,
+) -> RunResult:
+    """Algorithm 1 with q = partition.num_blocks feature-sharded workers.
+
+    Numerics: identical update sequence to serial SVRG (Theorem: the
+    decomposition w^T x = sum_l w^(l)T x^(l) is exact; summation follows
+    the tree order).  Communication/time: the paper's accounting —
+
+      outer t:  tree reduce+broadcast of the N-vector  w_t^T D  -> 2qN scalars
+      inner m:  tree reduce+broadcast of u margins      -> 2qu scalars
+    """
+    q = partition.num_blocks
+    cluster = cluster or ClusterModel()
+    rng = np.random.default_rng(cfg.seed)
+    w = jnp.zeros((data.dim,), dtype=data.values.dtype)
+    meter = CommMeter()
+    history: list[OuterRecord] = []
+    modeled_time = 0.0
+    n = data.num_instances
+    nnz = data.nnz_max
+    log_rounds = 2 * max(1, math.ceil(math.log2(q))) if q > 1 else 0
+    t_start = time.perf_counter()
+
+    for t in range(cfg.outer_iters):
+        # --- full-gradient phase (Alg 1 lines 3-5) ---
+        z_data, s0 = full_gradient(data, w, loss)
+        meter.tree_reduce_broadcast(q, payload=n)  # w_t^T D summed across blocks
+        # per-worker compute: margins over the local block (N*nnz/q flops-ish)
+        # + local scatter of the full gradient.
+        modeled_time += cluster.time(
+            critical_flops=2.0 * n * nnz / q * 2,  # margins + scatter
+            critical_scalars=2 * q * n,
+            rounds=log_rounds,
+        )
+
+        samples = _draw_samples(rng, n, cfg.inner_steps, cfg.batch_size)
+        mask = _option_mask(rng, cfg.inner_steps, cfg.option)
+        w = _inner_epoch(
+            data.indices,
+            data.values,
+            data.labels,
+            w,
+            z_data,
+            s0,
+            jnp.asarray(samples),
+            cfg.eta,
+            reg.lam,
+            jnp.asarray(mask),
+            loss.name,
+            reg.name,
+            q,
+            partition.bounds,
+        )
+        # --- inner-loop communication (Alg 1 lines 9-11): one tree round
+        # per mini-batch of u margins; M steps total (metered in aggregate).
+        meter.record(
+            "tree_reduce", 2 * q * cfg.batch_size * cfg.inner_steps,
+            rounds=log_rounds * cfg.inner_steps,
+        )
+        # Dense-update compute per worker: O(d/q) per step for the z + reg
+        # part plus O(nnz) for the sparse part.
+        modeled_time += cfg.inner_steps * cluster.time(
+            critical_flops=2.0 * (data.dim / q + cfg.batch_size * nnz),
+            critical_scalars=2 * q * cfg.batch_size,
+            rounds=log_rounds,
+        )
+
+        obj = objective(data, w, loss, reg)
+        gnorm = float(jnp.linalg.norm(z_data + reg.grad(w)))
+        history.append(
+            OuterRecord(
+                t,
+                obj,
+                gnorm,
+                meter.total_scalars,
+                meter.total_rounds,
+                modeled_time,
+                time.perf_counter() - t_start,
+            )
+        )
+    return RunResult(w=w, history=history, meter=meter)
+
+
+# ---------------------------------------------------------------------------
+# Explicit q-worker simulation (tests): workers only see their own blocks
+# ---------------------------------------------------------------------------
+
+
+def fdsvrg_worker_simulation(
+    data: PaddedCSR,
+    partition: FeaturePartition,
+    loss: losses_lib.MarginLoss,
+    reg: losses_lib.Regularizer,
+    cfg: SVRGConfig,
+) -> tuple[jax.Array, CommMeter]:
+    """Object-level Algorithm 1: a list of per-worker states, every
+    cross-worker scalar passes through :func:`simulate_tree_sum`.
+
+    Returns the concatenated final parameter and the comm meter.
+    Deliberately unjitted and slow — this is the executable spec.
+    """
+    q = partition.num_blocks
+    rng = np.random.default_rng(cfg.seed)
+    meter = CommMeter()
+    n = data.num_instances
+
+    # Worker state: w^(l)
+    blocks = [
+        jnp.zeros((partition.bounds[l + 1] - partition.bounds[l],), dtype=data.values.dtype)
+        for l in range(q)
+    ]
+
+    for t in range(cfg.outer_iters):
+        # Lines 3-4: each worker computes w_t^(l)T D^(l); tree-sum the N-vector.
+        partials = [
+            margins_block(data.indices, data.values, blocks[l], partition.bounds[l])
+            for l in range(q)
+        ]
+        s0 = simulate_tree_sum(partials, meter=meter, payload=n)
+        # Line 5: local full-gradient block from the shared margins.
+        coeffs0 = loss.dvalue(s0, data.labels) / n
+        z_blocks = [
+            scatter_grad_block(
+                data.indices,
+                data.values,
+                coeffs0,
+                partition.bounds[l],
+                blocks[l].shape[0],
+            )
+            for l in range(q)
+        ]
+
+        anchors = [b for b in blocks]  # w̃_0^(l) = w_t^(l)
+        samples = _draw_samples(rng, n, cfg.inner_steps, cfg.batch_size)
+        mask = _option_mask(rng, cfg.inner_steps, cfg.option)
+
+        for m in range(cfg.inner_steps):
+            ids = samples[m]
+            idx = data.indices[ids]
+            val = data.values[ids]
+            y = data.labels[ids]
+            # Lines 9-10: per-worker partial margins, tree-summed (u scalars).
+            partial_m = [
+                margins_block(idx, val, blocks[l], partition.bounds[l])
+                for l in range(q)
+            ]
+            s_m = simulate_tree_sum(partial_m, meter=meter, payload=cfg.batch_size)
+            s_a = s0[ids]
+            coef = (loss.dvalue(s_m, y) - loss.dvalue(s_a, y)) / cfg.batch_size
+            # Line 11: purely local update on each block.
+            for l in range(q):
+                sparse_part = scatter_grad_block(
+                    idx, val, coef, partition.bounds[l], blocks[l].shape[0]
+                )
+                g = sparse_part + z_blocks[l] + reg.grad(blocks[l])
+                blocks[l] = blocks[l] - (cfg.eta * float(mask[m])) * g
+
+    return jnp.concatenate(blocks), meter

@@ -1,0 +1,4 @@
+from repro.data.sparse import PaddedCSR
+from repro.data import datasets, synthetic
+
+__all__ = ["PaddedCSR", "datasets", "synthetic"]

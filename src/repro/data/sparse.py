@@ -1,0 +1,117 @@
+"""Padded-CSR sparse matrices for high-dimensional (d >> N) data in JAX.
+
+The paper's data sets (news20, url, webspam, kdd2010) are extremely sparse
+text/web feature matrices with d up to 29.9M.  TPUs (and XLA generally)
+want static shapes, so we store each instance with a fixed nnz budget:
+
+    indices: int32[N, nnz_max]   feature ids, padded with 0
+    values:  float32[N, nnz_max] feature values, padded with 0.0
+
+Padding with (index 0, value 0.0) is safe for every operation used here
+(dots and scatter-adds), because a zero value contributes nothing.
+
+The feature-distributed view of the same matrix keeps *global* feature ids
+but masks per-block membership, so a worker's shard is (indices, values,
+mask) with the mask selecting ids in [lo, hi).  Gathers against a local
+dense w block subtract ``lo``; masked-out lanes read w[0] and are zeroed
+by the mask, which keeps everything shape-static.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddedCSR:
+    """A sparse d x N design matrix stored instance-major with padded rows."""
+
+    indices: jax.Array  # int32[N, nnz_max]
+    values: jax.Array  # float32[N, nnz_max]
+    labels: jax.Array  # float32[N], in {-1, +1}
+    dim: int  # d
+
+    @property
+    def num_instances(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def nnz_max(self) -> int:
+        return int(self.indices.shape[1])
+
+    def nnz_total(self) -> int:
+        return int(jnp.sum(self.values != 0.0))
+
+    def instance(self, i: int) -> tuple[jax.Array, jax.Array]:
+        return self.indices[i], self.values[i]
+
+    def to_dense(self) -> np.ndarray:
+        """Dense d x N matrix (tests / tiny data only)."""
+        n, _ = self.indices.shape
+        out = np.zeros((self.dim, n), dtype=np.float32)
+        idx = np.asarray(self.indices)
+        val = np.asarray(self.values)
+        for i in range(n):
+            # np.add.at handles repeated indices (padding collides on 0).
+            np.add.at(out[:, i], idx[i], val[i])
+        return out
+
+
+def margins(data: PaddedCSR, w: jax.Array) -> jax.Array:
+    """s_i = w^T x_i for all instances; w is the dense d-vector."""
+    gathered = w[data.indices]  # [N, nnz]
+    return jnp.sum(gathered * data.values, axis=1)
+
+
+def margins_block(
+    indices: jax.Array,
+    values: jax.Array,
+    w_block: jax.Array,
+    lo: int,
+) -> jax.Array:
+    """Partial margins from one feature block [lo, lo+len(w_block)).
+
+    ``indices``/``values`` are global padded-CSR rows; entries outside the
+    block are masked out.  Returns s^(l)_i = w^(l)T x^(l)_i.
+    """
+    hi = lo + w_block.shape[0]
+    in_block = (indices >= lo) & (indices < hi)
+    local = jnp.where(in_block, indices - lo, 0)
+    gathered = jnp.where(in_block, w_block[local], 0.0)
+    return jnp.sum(gathered * values, axis=-1)
+
+
+def scatter_grad(
+    indices: jax.Array,
+    values: jax.Array,
+    coeffs: jax.Array,
+    dim: int,
+) -> jax.Array:
+    """sum_i coeffs_i * x_i as a dense d-vector (the data-dependent gradient).
+
+    indices/values: [N, nnz]; coeffs: [N].
+    """
+    flat_idx = indices.reshape(-1)
+    flat_val = (values * coeffs[:, None]).reshape(-1)
+    return jnp.zeros((dim,), dtype=values.dtype).at[flat_idx].add(flat_val)
+
+
+def scatter_grad_block(
+    indices: jax.Array,
+    values: jax.Array,
+    coeffs: jax.Array,
+    lo: int,
+    block_dim: int,
+) -> jax.Array:
+    """Feature-block view of :func:`scatter_grad` — only coords in [lo, lo+block_dim)."""
+    hi = lo + block_dim
+    in_block = (indices >= lo) & (indices < hi)
+    local = jnp.where(in_block, indices - lo, 0)
+    contrib = jnp.where(in_block, values, 0.0) * coeffs[..., None]
+    flat_idx = local.reshape(-1)
+    flat_val = contrib.reshape(-1)
+    return jnp.zeros((block_dim,), dtype=values.dtype).at[flat_idx].add(flat_val)

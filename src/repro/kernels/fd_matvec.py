@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: blocked feature-shard margin GEMM  S = wᵀ·D.
+
+This is the compute hot-spot of FD-SVRG's full-gradient phase (Algorithm 1
+lines 3-5): every outer iteration each worker computes its partial margins
+``w^(l)T D^(l)`` over *all* N instances.  On TPU the per-block data is laid
+out as a dense [d_block, N] matrix (text sparsity is exploited at the
+partition level — see DESIGN.md) so this phase is a skinny GEMM that
+should run on the MXU from VMEM tiles.
+
+Tiling: grid = (N / block_n, d / block_k), the k-dimension innermost so a
+given output tile stays resident in VMEM while partial products accumulate
+into it.  Block shapes default to (512, 256) — k a multiple of the 128-wide
+MXU systolic dimension, n a multiple of the lane width — giving a working
+set of 512*256*4B (D tile) + 512*4B (w tile) + 256*4B (out tile) ≈ 527 KB,
+comfortably inside the ~16 MB v5e VMEM even with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fd_matvec_kernel(w_ref, d_ref, out_ref):
+    """One (n, k) grid step: out[0, n-tile] += w[k-tile,0]ᵀ · D[k-tile, n-tile]."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        w_ref[...],
+        d_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),  # contract the d axis
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "block_n", "interpret")
+)
+def fd_matvec(
+    w: jax.Array,  # [d, 1]
+    data: jax.Array,  # [d, N]
+    *,
+    block_k: int = 512,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:  # [1, N] float32
+    d, one = w.shape
+    assert one == 1, "w must be [d, 1]"
+    d2, n = data.shape
+    assert d == d2, f"shape mismatch {w.shape} vs {data.shape}"
+    assert d % block_k == 0 and n % block_n == 0, "caller pads to tile multiples"
+
+    grid = (n // block_n, d // block_k)
+    return pl.pallas_call(
+        _fd_matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k, 1), lambda i, k: (k, 0)),
+            pl.BlockSpec((block_k, block_n), lambda i, k: (k, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i, k: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(w, data)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: single-token GQA attention over a long KV cache.
+
+The serving hot-spot for the decode_32k / long_500k shapes: one query
+token attends to up to 524k cached keys.  Decode attention is
+bandwidth-bound (every K/V byte is read once per token), so the kernel's
+job is to stream K/V through VMEM in blocks with an online-softmax
+accumulator and never materialize the [H, S] logits in HBM.
+
+Layout choices (TPU-native, not a CUDA port):
+  * grid = (kv_heads, S/block_s), S innermost so the per-head accumulator
+    lives in VMEM scratch across the sweep (the "split-K" dimension of GPU
+    flash-decoding becomes a sequential VMEM-resident sweep; cross-chip S
+    partitioning is handled one level up by GSPMD, not inside the kernel).
+  * all q-heads of one kv group are processed together -> the score matmul
+    is [group, Dh] x [Dh, block_s] on the MXU.
+  * cache-validity masking arrives as an additive bias row (0 / -1e30)
+    computed by the wrapper; this keeps the kernel free of scalar-prefetch
+    plumbing while the bias stream costs S*4 bytes vs the cache's
+    S*2*Hkv*Dh*2 — negligible.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_decode_kernel(
+    scale: float,
+    q_ref,  # [1, group, dh]
+    k_ref,  # [block_s, 1, dh]
+    v_ref,  # [block_s, 1, dh]
+    bias_ref,  # [1, block_s]
+    out_ref,  # [1, group, dh]
+    acc_ref,  # VMEM [group, dh] f32
+    m_ref,  # VMEM [group, 1] f32
+    l_ref,  # VMEM [group, 1] f32
+):
+    sb = pl.program_id(1)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [group, dh]
+    k = k_ref[:, 0, :].astype(jnp.float32)  # [block_s, dh]
+    v = v_ref[:, 0, :].astype(jnp.float32)
+    logits = (
+        jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        * scale
+        + bias_ref[...]  # [1, block_s] broadcasts over the group dim
+    )
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(sb == pl.num_programs(1) - 1)
+    def _finish():
+        out_ref[0] = (acc_ref[...] / l_ref[...]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_s", "interpret"))
+def flash_decode(
+    q: jax.Array,  # [hkv, group, dh]
+    k: jax.Array,  # [S, hkv, dh]
+    v: jax.Array,  # [S, hkv, dh]
+    bias: jax.Array,  # [1, S]  (0 for valid positions, -1e30 for invalid)
+    *,
+    scale: float,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:  # [hkv, group, dh] float32
+    hkv, group, dh = q.shape
+    s = k.shape[0]
+    assert k.shape == v.shape == (s, hkv, dh)
+    assert bias.shape == (1, s)
+    assert s % block_s == 0, "caller pads the cache to tile multiples"
+
+    grid = (hkv, s // block_s)
+    return pl.pallas_call(
+        functools.partial(_flash_decode_kernel, scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, group, dh), lambda j, sb: (j, 0, 0)),
+            pl.BlockSpec((block_s, 1, dh), lambda j, sb: (sb, j, 0)),
+            pl.BlockSpec((block_s, 1, dh), lambda j, sb: (sb, j, 0)),
+            pl.BlockSpec((1, block_s), lambda j, sb: (0, sb)),
+        ],
+        out_specs=pl.BlockSpec((1, group, dh), lambda j, sb: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hkv, group, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((group, dh), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)

@@ -1,0 +1,127 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to tile multiples, layout munging ([d] vectors to the 2-D
+layouts the TPU tiles want), backend selection (interpret=True off-TPU so
+the same code validates on CPU), and exposes shapes the rest of the
+framework uses.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fd_matvec import fd_matvec
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.logistic_grad import logistic_grad
+from repro.kernels.svrg_update import svrg_update
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def margins_dense(
+    w: jax.Array,  # [d]
+    data: jax.Array,  # [d, N]
+    *,
+    block_k: int = 512,
+    block_n: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:  # [N]
+    """S = wᵀD, the full-gradient-phase margins for one feature block."""
+    interpret = _interpret_default() if interpret is None else interpret
+    d, n = data.shape
+    w2 = _pad_to(w[:, None], 0, block_k)
+    d2 = _pad_to(_pad_to(data, 0, block_k), 1, block_n)
+    out = fd_matvec(w2, d2, block_k=block_k, block_n=block_n, interpret=interpret)
+    return out[0, :n]
+
+
+def loss_and_grad(
+    s: jax.Array,  # [N]
+    y: jax.Array,  # [N]
+    *,
+    block: int = 1024,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused logistic loss values + margin derivatives."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n = s.shape[0]
+    s2 = _pad_to(s[None, :], 1, block)
+    y2 = _pad_to(y[None, :], 1, block, value=1.0)
+    loss, dloss = logistic_grad(s2, y2, block=block, interpret=interpret)
+    return loss[0, :n], dloss[0, :n]
+
+
+def svrg_dense_update(
+    w: jax.Array,  # [d]
+    g_sparse: jax.Array,  # [d]
+    z: jax.Array,  # [d]
+    *,
+    eta: float,
+    lam: float,
+    block: int = 2048,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused w' = (1-eta*lam) w - eta (g_sparse + z)   (L2 path)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    d = w.shape[0]
+    w2 = _pad_to(w[None, :], 1, block)
+    g2 = _pad_to(g_sparse[None, :], 1, block)
+    z2 = _pad_to(z[None, :], 1, block)
+    out = svrg_update(w2, g2, z2, eta=eta, lam=lam, block=block, interpret=interpret)
+    return out[0, :d]
+
+
+def decode_attention(
+    q: jax.Array,  # [H, Dh] one token's query heads
+    k: jax.Array,  # [S, Hkv, Dh] cache
+    v: jax.Array,  # [S, Hkv, Dh]
+    *,
+    length: jax.Array | int,  # valid cache prefix
+    scale: float | None = None,
+    block_s: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:  # [H, Dh]
+    """Flash-decoding over the KV cache (one token, GQA)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    h, dh = q.shape
+    s, hkv, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+
+    s_pad = s + ((-s) % block_s)
+    kp = _pad_to(k, 0, block_s)
+    vp = _pad_to(v, 0, block_s)
+    bias = jnp.where(jnp.arange(s_pad)[None, :] < length, 0.0, -1e30).astype(
+        jnp.float32
+    )
+    qg = q.reshape(hkv, group, dh)
+    out = flash_decode(
+        qg, kp, vp, bias, scale=scale, block_s=block_s, interpret=interpret
+    )
+    return out.reshape(h, dh)
+
+
+__all__ = [
+    "margins_dense",
+    "loss_and_grad",
+    "svrg_dense_update",
+    "decode_attention",
+    "ref",
+]

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fd_matvec_ref(w: jax.Array, data: jax.Array) -> jax.Array:
+    """w: [d, 1], data: [d, N] -> [1, N] float32."""
+    return jnp.dot(
+        w.astype(jnp.float32).T, data.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def logistic_grad_ref(s: jax.Array, y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    s = s.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    z = -y * s
+    loss = jnp.logaddexp(0.0, z)
+    dloss = -y * jax.nn.sigmoid(z)
+    return loss, dloss
+
+
+def svrg_update_ref(
+    w: jax.Array, g_sparse: jax.Array, z: jax.Array, *, eta: float, lam: float
+) -> jax.Array:
+    w = w.astype(jnp.float32)
+    return w - eta * (
+        g_sparse.astype(jnp.float32) + z.astype(jnp.float32) + lam * w
+    )
+
+
+def flash_decode_ref(
+    q: jax.Array,  # [H, Dh]
+    k: jax.Array,  # [S, Hkv, Dh]
+    v: jax.Array,  # [S, Hkv, Dh]
+    *,
+    length: int | jax.Array,  # valid prefix of the cache
+    scale: float | None = None,
+) -> jax.Array:  # [H, Dh]
+    """One-token GQA attention over a KV cache (serving hot loop)."""
+    h, dh = q.shape
+    s, hkv, _ = k.shape
+    group = h // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    qg = q.reshape(hkv, group, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("kgd,skd->kgs", qg, kf) * scale
+    mask = jnp.arange(s)[None, None, :] < length
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("kgs,skd->kgd", p, vf)
+    return out.reshape(h, dh)

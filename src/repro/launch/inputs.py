@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run contract).
+
+``input_specs(cfg, shape)`` returns exactly the pytrees the jitted step
+functions consume — weak-type-correct, shardable, zero allocation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+S = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, grad_accum: int = 1) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+
+    def shaped(*dims, dtype=jnp.int32):
+        if grad_accum > 1:
+            assert b % grad_accum == 0, (cfg.name, b, grad_accum)
+            dims = (grad_accum, b // grad_accum) + dims[1:]
+        return S(dims, dtype)
+
+    if cfg.modality == "audio-codec":
+        return {
+            "tokens": shaped(b, s, cfg.num_codebooks),
+            "labels": shaped(b, s, cfg.num_codebooks),
+        }
+    if cfg.modality == "vision":
+        return {
+            "tokens": shaped(b, s - cfg.num_patches),
+            "patch_embeds": shaped(b, cfg.num_patches, cfg.frontend_dim, dtype=jnp.float32),
+            "labels": shaped(b, s),
+        }
+    return {"tokens": shaped(b, s), "labels": shaped(b, s)}
+
+
+def decode_token_specs(cfg: ModelConfig, shape: InputShape) -> jax.ShapeDtypeStruct:
+    b = shape.global_batch
+    if cfg.modality == "audio-codec":
+        return S((b, 1, cfg.num_codebooks), jnp.int32)
+    return S((b, 1), jnp.int32)
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.modality == "audio-codec":
+        return {"tokens": S((b, s, cfg.num_codebooks), jnp.int32)}
+    if cfg.modality == "vision":
+        return {
+            "tokens": S((b, s - cfg.num_patches), jnp.int32),
+            "patch_embeds": S((b, cfg.num_patches, cfg.frontend_dim), jnp.float32),
+        }
+    return {"tokens": S((b, s), jnp.int32)}

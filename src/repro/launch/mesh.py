@@ -1,0 +1,35 @@
+"""Production meshes (TPU v5e): 16x16 single pod, 2x16x16 multi-pod.
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state; callers (dryrun.py) set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _mesh(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU tests (device count permitting)."""
+    return _mesh((data, model), ("data", "model"))
+
+
+def chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: named hypothesis experiments over the dry-run.
+
+    PYTHONPATH=src python -m repro.launch.perf --pair jamba_train
+    PYTHONPATH=src python -m repro.launch.perf --pair qwen3_prefill
+    PYTHONPATH=src python -m repro.launch.perf --pair fdsvrg
+
+Each experiment = a config delta applied to the baseline architecture,
+re-lowered and re-analysed exactly like the dry-run; results append to
+results/perf/<pair>.json with before/after roofline terms.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs_pkg
+from repro.configs import get_config
+import repro.launch.dryrun as dryrun
+
+RESULTS = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "perf")
+)
+
+
+def _run_variant(base_arch: str, shape: str, label: str, **overrides) -> dict:
+    cfg = get_config(base_arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    tmp = f"__perf_{label}"
+    cfg = dataclasses.replace(cfg, name=tmp)
+    configs_pkg.ARCHS[tmp] = cfg
+    dryrun.GRAD_ACCUM[tmp] = dryrun.GRAD_ACCUM[base_arch]
+    try:
+        res = dryrun.dryrun_one(tmp, shape, False)
+    finally:
+        configs_pkg.ARCHS.pop(tmp, None)
+        dryrun.GRAD_ACCUM.pop(tmp, None)
+    res["label"] = label
+    res["overrides"] = {k: str(v) for k, v in overrides.items()}
+    return res
+
+
+def _print_row(res: dict):
+    rl = res["roofline"]
+    mem = res.get("memory_analysis", {}).get("temp_size_in_bytes", 0) / 2**30
+    print(
+        f"  {res['label']:<28} compute={rl['compute_s']:.4f}s "
+        f"memory={rl['memory_s']:.4f}s collective={rl['collective_s']:.4f}s "
+        f"dominant={rl['dominant']:<10} useful={res.get('useful_flops_ratio') or 0:.3f} "
+        f"temp={mem:.1f}GiB",
+        flush=True,
+    )
+
+
+def pair_jamba_train() -> list[dict]:
+    """jamba-v0.1-52b x train_4k.  Baseline dominant: memory; useful-flops
+    ratio 0.096 — the SSD intra-chunk quadratic term (chunk=256 vs
+    d_state=16) wastes ~L/(2N) of the mixer FLOPs and its L^2 decay
+    matrices carry the memory term."""
+    out = [_run_variant("jamba-v0.1-52b", "train_4k", "baseline")]
+    _print_row(out[-1])
+    # H1a: chunk ~ 4*d_state balances intra (L) vs inter (N) work
+    for chunk in (64, 32):
+        out.append(_run_variant("jamba-v0.1-52b", "train_4k",
+                                f"ssm_chunk={chunk}", ssm_chunk=chunk))
+        _print_row(out[-1])
+    # H1b: bf16 SSD operands halve the streamed bytes (f32 accumulation)
+    out.append(_run_variant("jamba-v0.1-52b", "train_4k",
+                            "chunk=32+bf16-ssd",
+                            ssm_chunk=32, ssm_compute_dtype="bfloat16"))
+    _print_row(out[-1])
+    return out
+
+
+def pair_qwen3_prefill() -> list[dict]:
+    """qwen3-14b x prefill_32k.  The single-scan flash path scores every
+    (q, k) chunk pair; causal block-skipping halves score FLOPs."""
+    out = [_run_variant("qwen3-14b", "prefill_32k", "baseline")]
+    _print_row(out[-1])
+    for qc in (4096, 2048):
+        out.append(_run_variant("qwen3-14b", "prefill_32k",
+                                f"q_chunk={qc}", attn_q_chunk=qc))
+        _print_row(out[-1])
+    return out
+
+
+def pair_gemma2_long() -> list[dict]:
+    """gemma2-9b x long_500k (extra): block-skipping on local layers should
+    collapse their work to O(window)."""
+    out = [_run_variant("gemma2-9b", "long_500k", "baseline")]
+    _print_row(out[-1])
+    return out
+
+
+def pair_fdsvrg() -> list[dict]:
+    """The paper's own workload: collective-term iteration."""
+    from repro.core.fdsvrg_shardmap import FDSVRGShardedConfig, make_outer_iteration
+    from repro.launch.mesh import chips, make_production_mesh
+    from repro.launch import roofline as rl
+
+    mesh = make_production_mesh(multi_pod=False)
+    q = chips(mesh)
+    d = ((29_890_095 + q - 1) // q) * q
+    n, nnz, m = 65_536, 32, 256
+    out = []
+    for label, tree_mode, u in (
+        ("baseline-psum-u64", "psum", 64),
+        ("butterfly-u64", "butterfly", 64),
+        ("psum-u512", "psum", 512),
+        ("psum-u8", "psum", 8),
+    ):
+        cfg = FDSVRGShardedConfig(dim=d, num_instances=n, nnz_max=nnz, eta=0.1,
+                                  inner_steps=m, batch_size=u, tree_mode=tree_mode)
+        step = make_outer_iteration(mesh, cfg, feature_axes=("data", "model"))
+        args = (
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((n, nnz), jnp.int32),
+            jax.ShapeDtypeStruct((n, nnz), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((m, u), jnp.int32),
+        )
+        compiled = step.lower(*args).compile()
+        coll = rl.collective_bytes(compiled.as_text())
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        # the inner scan body is counted once; scale collective/flops by M
+        # analytically for the inner-loop share (1 tree per step)
+        res = {
+            "label": label, "arch": "fdsvrg-kdd2010", "shape": "outer",
+            "mesh": "16x16", "chips": q,
+            "collectives": coll,
+            "flops_dev": float(cost.get("flops", 0.0)),
+            "bytes_dev": float(cost.get("bytes accessed", 0.0)),
+            "roofline": {
+                "compute_s": float(cost.get("flops", 0.0)) / 197e12,
+                "memory_s": float(cost.get("bytes accessed", 0.0)) / 819e9,
+                "collective_s": sum(coll.values()) / 50e9,
+                "dominant": "n/a",
+            },
+            "inner_steps": m, "batch": u, "tree_mode": tree_mode,
+            "ok": True,
+        }
+        out.append(res)
+        print(f"  {label:<28} coll_bytes={sum(coll.values()):>12,} "
+              f"kinds={ {k: v for k, v in sorted(coll.items())} }", flush=True)
+    return out
+
+
+PAIRS = {
+    "jamba_train": pair_jamba_train,
+    "qwen3_prefill": pair_qwen3_prefill,
+    "gemma2_long": pair_gemma2_long,
+    "fdsvrg": pair_fdsvrg,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=sorted(PAIRS))
+    args = ap.parse_args()
+    os.makedirs(RESULTS, exist_ok=True)
+    t0 = time.time()
+    print(f"== perf pair: {args.pair} ==", flush=True)
+    results = PAIRS[args.pair]()
+    with open(os.path.join(RESULTS, f"{args.pair}.json"), "w") as f:
+        json.dump(results, f, indent=2, default=str)
+    print(f"done in {time.time()-t0:.0f}s -> results/perf/{args.pair}.json")
+
+
+if __name__ == "__main__":
+    main()

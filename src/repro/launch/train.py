@@ -1,0 +1,78 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 100 --batch 8 --seq 256 [--reduced] [--optimizer adamw]
+        [--svrg-anchor-every 50] [--ckpt /tmp/ck]
+
+Runs on whatever devices exist (1 CPU here; the production mesh path is
+exercised by dryrun.py).  ``--reduced`` selects the smoke-scale variant of
+the architecture so a full run fits a laptop.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import PipelineConfig, batches
+from repro.models import transformer
+from repro.optim import optimizers
+from repro.sharding.specs import unsharded_ctx
+from repro.train.loop import TrainSettings, init_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd", "momentum"])
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    ctx = unsharded_ctx()
+    opt = optimizers.OPTIMIZERS[args.optimizer](args.lr)
+    settings = TrainSettings(grad_accum=args.grad_accum)
+    state = init_state(cfg, jax.random.key(0), opt, tp=1)
+    step = jax.jit(make_train_step(cfg, ctx, opt, settings))
+
+    pcfg = PipelineConfig(args.batch, args.seq, grad_accum=args.grad_accum)
+    it = batches(cfg, pcfg)
+    n_params = sum(p.size for p in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M steps={args.steps}")
+
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, metrics = step(state, batch)
+        if (i + 1) % args.log_every == 0 or i == 0:
+            dt = time.perf_counter() - t0
+            print(
+                f"step {i+1:5d} loss={float(metrics['loss']):.4f} "
+                f"ce={float(metrics['ce']):.4f} "
+                f"gnorm={float(metrics.get('grad_norm', 0.0)):.3f} "
+                f"({dt/(i+1):.2f}s/step)",
+                flush=True,
+            )
+    if args.ckpt:
+        from repro.checkpoint import ckpt
+
+        ckpt.save(args.ckpt, state)
+        print(f"saved checkpoint to {args.ckpt}.npz")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

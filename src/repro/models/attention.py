@@ -1,0 +1,302 @@
+"""GQA attention: flash-style chunked train/prefill path + cached decode.
+
+Feature-distributed mapping (DESIGN.md §4): head projections are the
+partitioned feature axes; between-chip traffic is activation reductions.
+Two cache layouts:
+
+* train/prefill — q laid out [B, H, S, Dh] with H carried by the ``model``
+  axis (GSPMD pads when H doesn't divide the axis; recorded per-arch in
+  DESIGN.md).  Keys/values stream through a lax.scan over key chunks with
+  an online-softmax accumulator, so the [S, S] score matrix never
+  materializes (required for prefill_32k).
+* decode — the KV cache is sequence-sharded over ``model``
+  (flash-decoding split-K, but across chips): each chip scores its cache
+  shard and the softmax max/sum and weighted-value reductions cross chips
+  as *scalar-per-head* collectives — the paper's communicate-inner-
+  products-not-vectors principle applied to serving.
+
+Supports: GQA/MQA, RoPE, qk-norm (qwen3), sliding window (gemma2 local
+layers), attention logit softcap (gemma2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, init_rms_scale, rms_norm, softcap
+from repro.models.unroll import scan_unroll
+
+_MASK_VALUE = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    window: int | None = None  # sliding window (None = global)
+    attn_softcap: float | None = None
+    norm_eps: float = 1e-6
+    kv_chunk: int = 1024
+    # §Perf lever: when set, queries are processed in blocks of q_chunk and
+    # each block only visits the key chunks its causal/window mask can
+    # reach — skipping ~half the score matmuls (more for sliding windows).
+    q_chunk: int | None = None
+
+    @property
+    def group(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+
+def init_attention(key, d_model: int, cfg: AttnConfig, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s_in = d_model ** -0.5
+    s_out = (cfg.num_heads * cfg.head_dim) ** -0.5
+    params = {
+        "wq": (jax.random.normal(kq, (d_model, cfg.num_heads, cfg.head_dim)) * s_in).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_model, cfg.num_kv_heads, cfg.head_dim)) * s_in).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_model, cfg.num_kv_heads, cfg.head_dim)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(ko, (cfg.num_heads, cfg.head_dim, d_model)) * s_out).astype(dtype),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = init_rms_scale(cfg.head_dim)
+        params["k_norm"] = init_rms_scale(cfg.head_dim)
+    return params
+
+
+def _project_qkv(params, x, positions, cfg: AttnConfig, ctx):
+    """x: [B, S, D] -> q [B, H, S, Dh], k/v [B, S, Hkv, Dh] (rope applied)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = jnp.swapaxes(q, 1, 2)  # [B, H, S, Dh]
+    q = ctx.constrain(q, "batch", "heads", None, None)
+    k = ctx.constrain(k, "batch", None, "kv_heads", None)
+    v = ctx.constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def attention_train(
+    params: dict,
+    x: jax.Array,  # [B, S, D]
+    positions: jax.Array,  # [B, S]
+    cfg: AttnConfig,
+    ctx,
+    *,
+    kv_chunk: int | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Causal (optionally windowed) attention; returns output and (k, v)
+    in cache layout so prefill shares this path."""
+    b, s, d = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    scale = dh ** -0.5
+    kv_chunk = cfg.kv_chunk if kv_chunk is None else kv_chunk
+    q, k, v = _project_qkv(params, x, positions, cfg, ctx)
+
+    if cfg.q_chunk is not None and s > cfg.q_chunk:
+        y = _attention_blockwise(q, k, v, positions, cfg, ctx, scale)
+        return y_project(params, y, ctx, x.dtype), (k, v)
+
+    kv_chunk = min(kv_chunk, s)
+    assert s % kv_chunk == 0, f"seq {s} % kv_chunk {kv_chunk} != 0"
+    n_chunks = s // kv_chunk
+    # chunk layout: [n, B, kc, Hkv, Dh]
+    kc = k.reshape(b, n_chunks, kv_chunk, cfg.num_kv_heads, dh).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, kv_chunk, cfg.num_kv_heads, dh).swapaxes(0, 1)
+    kpos = positions.reshape(b, n_chunks, kv_chunk).swapaxes(0, 1)
+
+    acc0 = jnp.zeros((b, h, s, dh), jnp.float32)
+    m0 = jnp.full((b, h, s, 1), _MASK_VALUE, jnp.float32)
+    l0 = jnp.zeros((b, h, s, 1), jnp.float32)
+
+    def step(carry, inp):
+        acc, m, l = carry
+        k_c, v_c, kp = inp  # [B, kc, Hkv, Dh], ..., [B, kc]
+        # expand kv groups to full heads (local gather; kv replicated on model)
+        k_r = jnp.repeat(k_c, cfg.group, axis=2)  # [B, kc, H, Dh]
+        v_r = jnp.repeat(v_c, cfg.group, axis=2)
+        scores = jnp.einsum(
+            "bhsd,bchd->bhsc", q.astype(jnp.float32), k_r.astype(jnp.float32)
+        ) * scale
+        scores = softcap(scores, cfg.attn_softcap)
+        causal = kp[:, None, None, :] <= positions[:, None, :, None]
+        if cfg.window is not None:
+            causal &= (positions[:, None, :, None] - kp[:, None, None, :]) < cfg.window
+        scores = jnp.where(causal, scores, _MASK_VALUE)
+        scores = ctx.constrain(scores, "batch", "heads", None, None)
+
+        m_new = jnp.maximum(m, scores.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bhsc,bchd->bhsd", p, v_r.astype(jnp.float32)
+        )
+        return (acc_new, m_new, l_new), None
+
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (kc, vc, kpos), unroll=scan_unroll(n_chunks)
+    )
+    out = acc / jnp.maximum(l, 1e-30)  # [B, H, S, Dh]
+    return y_project(params, out, ctx, x.dtype), (k, v)
+
+
+def y_project(params, out_f32, ctx, dtype):
+    y = jnp.einsum("bhsd,hdo->bso", out_f32.astype(dtype), params["wo"])
+    return ctx.constrain(y, "batch", "seq", "embed")
+
+
+def _attention_blockwise(q, k, v, positions, cfg: AttnConfig, ctx, scale):
+    """Causal block-skipping flash attention (§Perf lever, exact numerics).
+
+    Queries are processed q_chunk at a time; block (i) only scans the key
+    chunks its mask can reach: [lo_i, (i+1)*qc) with lo_i = 0 for global
+    attention or aligned(start of window) for sliding-window layers.
+    Relative to the single-scan path this skips the fully-masked upper
+    triangle (~2x fewer score FLOPs at long S; much more for local layers).
+    Assumes canonical positions (arange), which train/prefill use.
+    """
+    b, h, s, dh = q.shape
+    qc = cfg.q_chunk
+    kc = min(cfg.kv_chunk, qc)
+    assert s % qc == 0 and qc % kc == 0, (s, qc, kc)
+    outs = []
+    for i in range(s // qc):
+        q_i = q[:, :, i * qc : (i + 1) * qc, :].astype(jnp.float32)
+        qpos = positions[:, i * qc : (i + 1) * qc]
+        hi = (i + 1) * qc
+        lo = 0
+        if cfg.window is not None:
+            lo = max(0, (i * qc - cfg.window) // kc * kc)
+        n_kc = (hi - lo) // kc
+        k_i = k[:, lo:hi].reshape(b, n_kc, kc, cfg.num_kv_heads, dh).swapaxes(0, 1)
+        v_i = v[:, lo:hi].reshape(b, n_kc, kc, cfg.num_kv_heads, dh).swapaxes(0, 1)
+        kpos = positions[:, lo:hi].reshape(b, n_kc, kc).swapaxes(0, 1)
+
+        def step(carry, inp):
+            acc, m, l = carry
+            k_c, v_c, kp = inp
+            k_r = jnp.repeat(k_c, cfg.group, axis=2)
+            v_r = jnp.repeat(v_c, cfg.group, axis=2)
+            scores = jnp.einsum(
+                "bhsd,bchd->bhsc", q_i, k_r.astype(jnp.float32)
+            ) * scale
+            scores = softcap(scores, cfg.attn_softcap)
+            causal = kp[:, None, None, :] <= qpos[:, None, :, None]
+            if cfg.window is not None:
+                causal &= (qpos[:, None, :, None] - kp[:, None, None, :]) < cfg.window
+            scores = jnp.where(causal, scores, _MASK_VALUE)
+            scores = ctx.constrain(scores, "batch", "heads", None, None)
+            m_new = jnp.maximum(m, scores.max(axis=-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(scores - m_new)
+            l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bhsc,bchd->bhsd", p, v_r.astype(jnp.float32)
+            )
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, qc, dh), jnp.float32)
+        m0 = jnp.full((b, h, qc, 1), _MASK_VALUE, jnp.float32)
+        l0 = jnp.zeros((b, h, qc, 1), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            step, (acc0, m0, l0), (k_i, v_i, kpos), unroll=scan_unroll(n_kc)
+        )
+        outs.append(acc / jnp.maximum(l, 1e-30))
+    return jnp.concatenate(outs, axis=2)  # [B, H, S, Dh] f32
+
+
+def init_kv_cache(
+    batch: int, max_len: int, cfg: AttnConfig, dtype, ctx
+) -> dict:
+    k = jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    v = jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    return {
+        "k": ctx.constrain(k, "batch", "seq_kv", None, None),
+        "v": ctx.constrain(v, "batch", "seq_kv", None, None),
+    }
+
+
+def attention_decode(
+    params: dict,
+    x: jax.Array,  # [B, 1, D] current token's activations
+    cache: dict,  # {"k": [B, S, Hkv, Dh], "v": ...} sequence-sharded
+    pos: jax.Array,  # [] int32 — current position (same for the whole batch)
+    cfg: AttnConfig,
+    ctx,
+) -> tuple[jax.Array, dict]:
+    b, one, d = x.shape
+    hkv, dh, g = cfg.num_kv_heads, cfg.head_dim, cfg.group
+    s_max = cache["k"].shape[1]
+    scale = dh ** -0.5
+    positions = jnp.broadcast_to(pos, (b, 1))
+
+    q, k_new, v_new = _project_qkv(params, x, positions, cfg, ctx)
+    # q: [B, H, 1, Dh] -> grouped [B, Hkv, G, Dh]
+    qg = q[:, :, 0, :].reshape(b, hkv, g, dh)
+
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
+    k = ctx.constrain(k, "batch", "seq_kv", None, None)
+    v = ctx.constrain(v, "batch", "seq_kv", None, None)
+
+    # scores over the (sequence-sharded) cache: [B, Hkv, G, S]
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    kpos = jnp.arange(s_max)
+    valid = kpos[None, None, None, :] <= pos
+    if cfg.window is not None:
+        valid &= (pos - kpos[None, None, None, :]) < cfg.window
+    scores = jnp.where(valid, scores, _MASK_VALUE)
+
+    # max/sum reductions over the sharded S axis -> scalar-per-head traffic
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32)) / jnp.maximum(
+        l, 1e-30
+    )
+    out = out.reshape(b, 1, cfg.num_heads, dh).swapaxes(1, 2)  # [B, H, 1, Dh]
+    y = jnp.einsum("bhsd,hdo->bso", out.astype(x.dtype), params["wo"])
+    y = ctx.constrain(y, "batch", None, "embed")
+    return y, {"k": k, "v": v}
+
+
+def attention_ref(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: AttnConfig,
+    ctx,
+) -> jax.Array:
+    """Materialized-logits oracle (small shapes / tests only)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(params, x, positions, cfg, ctx)
+    k_r = jnp.repeat(k, cfg.group, axis=2)  # [B, S, H, Dh]
+    v_r = jnp.repeat(v, cfg.group, axis=2)
+    scores = jnp.einsum(
+        "bhsd,bthd->bhst", q.astype(jnp.float32), k_r.astype(jnp.float32)
+    ) * (cfg.head_dim ** -0.5)
+    scores = softcap(scores, cfg.attn_softcap)
+    causal = positions[:, None, None, :] <= positions[:, None, :, None]
+    if cfg.window is not None:
+        causal &= (
+            positions[:, None, :, None] - positions[:, None, None, :]
+        ) < cfg.window
+    scores = jnp.where(causal, scores, _MASK_VALUE)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bhsd", p, v_r.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bhsd,hdo->bso", out, params["wo"])

@@ -1,0 +1,132 @@
+"""Shared building blocks: norms, rotary embeddings, MLPs, embeddings."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) so zero-init means identity
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_scale(dim: int) -> jax.Array:
+    return jnp.zeros((dim,), dtype=jnp.float32)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,  # [..., S, H, Dh]
+    positions: jax.Array,  # [..., S]
+    theta: float,
+) -> jax.Array:
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+
+ACTS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron squared-ReLU
+}
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, gated: bool = True) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * scale_out).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(k1, (d_model, d_ff)) * scale_in).astype(dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, act: str, ctx) -> jax.Array:
+    """MLP, gated (SwiGLU/GeGLU) when w_gate is present, plain otherwise
+    (nemotron-style squared-ReLU).  x: [B, S, D] -> [B, S, D].
+
+    The hidden dim is the feature-partitioned axis: only the final
+    projection's output needs a reduction — activations cross chips,
+    parameters never do (the paper's communication pattern).
+    """
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    u = ctx.constrain(u, "batch", "seq", "mlp")
+    if "w_gate" in params:
+        h = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = ctx.constrain(h, "batch", "seq", "mlp")
+        h = ACTS[act](h) * u
+    else:
+        h = ACTS[act](u)
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+    return ctx.constrain(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * (d_model ** -0.5)).astype(dtype)
+
+
+def embed_tokens(table: jax.Array, tokens: jax.Array, ctx, scale: bool) -> jax.Array:
+    x = table[tokens]  # [B, S, D] gather over the vocab-sharded table
+    if scale:
+        x = x * jnp.asarray(table.shape[-1] ** 0.5, x.dtype)
+    return ctx.constrain(x, "batch", "seq", "embed")
+
+
+def lm_logits(
+    x: jax.Array,  # [B, S, D]
+    table: jax.Array,  # [V, D] (tied) or head [D, V]
+    *,
+    tied: bool,
+    cap: float | None,
+    ctx,
+) -> jax.Array:
+    if tied:
+        logits = jnp.einsum("bsd,vd->bsv", x, table)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, table)
+    logits = ctx.constrain(logits, "batch", "seq", "vocab")
+    return softcap(logits.astype(jnp.float32), cap)

@@ -1,0 +1,180 @@
+"""Top-k MoE with expert-parallel, capacity-bounded sort dispatch.
+
+Routing (per token): softmax router, top-k experts, combine weights
+renormalized over the selected k (OLMoE / Mixtral convention).
+
+Dispatch is the sort-based fixed-capacity scheme (TPU-native: all shapes
+static, no ragged tensors):
+  1. flatten (token, k) assignment pairs and sort by expert id,
+  2. rank each pair within its expert's run; pairs ranked past the
+     per-expert capacity C are dropped (standard GShard-style overflow),
+  3. gather tokens into an [E, C, D] buffer -> per-expert dense GEMMs
+     (the MXU path), experts sharded over the ``model`` axis,
+  4. scatter-add weighted expert outputs back to [T, D]; with experts
+     sharded, this combine is the activation all-reduce — the paper's
+     feature-partition communication pattern, with experts as the
+     feature blocks.
+
+Aux outputs: load-balance loss (Switch-style) and router z-loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int  # per-expert hidden
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    act: str = "silu"
+
+
+def init_moe(key, cfg: MoEConfig, dtype) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    s_in, s_out = d ** -0.5, f ** -0.5
+    return {
+        "router": (jax.random.normal(kr, (d, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(kg, (e, d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ku, (e, d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (e, f, d)) * s_out).astype(dtype),
+    }
+
+
+def capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(cfg.top_k, min(c, tokens))
+
+
+def _num_groups(ctx, b: int) -> int:
+    """Dispatch groups = data-parallel shards (GShard-style), so routing,
+    capacity and the token<->expert buffers stay shard-local.  Without the
+    group axis, capacity is computed over the GLOBAL token count and the
+    expert buffers (and their GEMMs) are data-shards-times too large —
+    measured as the 13-16x useful-flops inflation of the MoE baselines
+    (EXPERIMENTS.md §Perf pair 1)."""
+    if ctx is None or getattr(ctx, "mesh", None) is None:
+        return 1
+    from repro.sharding.specs import axis_size
+
+    g = axis_size(ctx.mesh, "batch")
+    while g > 1 and b % g:
+        g //= 2
+    return max(1, g)
+
+
+def moe_ffn(
+    params: dict,
+    x: jax.Array,  # [B, S, D]
+    cfg: MoEConfig,
+    ctx,
+    num_groups: int | None = None,
+) -> tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    g = _num_groups(ctx, b) if num_groups is None else num_groups
+    tg = t // g  # tokens per group
+    cap = capacity(tg, cfg)
+    xg = x.reshape(g, tg, d)
+
+    def dispatch_group(xt, router):
+        # ---- routing (per group) ----
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, axis=-1)  # [Tg, E]
+        top_w, top_e = jax.lax.top_k(probs, k)  # [Tg, k]
+        top_w = top_w / jnp.maximum(top_w.sum(axis=-1, keepdims=True), 1e-9)
+
+        frac_tokens = jnp.mean(
+            (jax.nn.one_hot(top_e, e).sum(axis=1) > 0).astype(jnp.float32), axis=0
+        )
+        frac_probs = jnp.mean(probs, axis=0)
+        lb_loss = e * jnp.sum(frac_tokens * frac_probs)
+        z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+        # ---- sort-based dispatch ----
+        flat_e = top_e.reshape(-1)  # [Tg*k]
+        flat_t = jnp.repeat(jnp.arange(tg), k)
+        flat_w = top_w.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se = flat_e[order]
+        st = flat_t[order]
+        sw = flat_w[order]
+        first = jnp.searchsorted(se, se, side="left")
+        rank = jnp.arange(tg * k) - first
+        keep = rank < cap
+        # dropped pairs get an out-of-range slot; mode="drop" discards them
+        slot = jnp.where(keep, se * cap + rank, e * cap)
+
+        pad_row = tg
+        buf_tok = jnp.full((e * cap,), pad_row, jnp.int32)
+        buf_tok = buf_tok.at[slot].set(st.astype(jnp.int32), mode="drop")
+        buf_w = jnp.zeros((e * cap,), jnp.float32).at[slot].set(sw, mode="drop")
+
+        xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+        dispatched = xt_pad[buf_tok].reshape(e, cap, d)
+        aux = (lb_loss, z_loss, jnp.mean(keep.astype(jnp.float32)))
+        return dispatched, buf_tok, buf_w, aux
+
+    dispatched, buf_tok, buf_w, (lb, zl, kept) = jax.vmap(
+        dispatch_group, in_axes=(0, None)
+    )(xg, params["router"])
+    # [G, E, C, D]: groups ride the data axes, experts the model axis
+    dispatched = ctx.constrain(dispatched, "batch", "experts", None, "embed")
+
+    # ---- expert GEMMs (experts on the model axis, groups on data) ----
+    h = jnp.einsum("gecd,edf->gecf", dispatched, params["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", dispatched, params["w_up"])
+    h = ctx.constrain(h, "batch", "experts", None, "expert_mlp")
+    h = jax.nn.silu(h) if cfg.act == "silu" else jax.nn.gelu(h)
+    h = h * u
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    out_buf = ctx.constrain(out_buf, "batch", "experts", None, "embed")
+
+    # ---- combine: per-group weighted scatter-add back to tokens ----
+    def combine_group(out_b, tok, w):
+        contrib = out_b.reshape(e * cap, d) * w[:, None].astype(out_b.dtype)
+        return jnp.zeros((tg + 1, d), out_b.dtype).at[tok].add(contrib)[:tg]
+
+    y = jax.vmap(combine_group)(out_buf, buf_tok, buf_w)  # [G, Tg, D]
+    y = y.reshape(b, s, d)
+    y = ctx.constrain(y, "batch", "seq", "embed")
+
+    aux = {
+        "lb_loss": jnp.mean(lb),
+        "z_loss": jnp.mean(zl),
+        "overflow_frac": 1.0 - jnp.mean(kept),
+    }
+    return y.astype(x.dtype), aux
+
+
+def moe_ffn_dense_ref(params: dict, x: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """Oracle: compute every expert densely, combine by router weights.
+    O(E x) compute — tests only.  Matches moe_ffn exactly when no token
+    overflows capacity."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, cfg.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(axis=-1, keepdims=True), 1e-9)
+
+    h = jnp.einsum("td,edf->etf", xt, params["w_gate"])
+    u = jnp.einsum("td,edf->etf", xt, params["w_up"])
+    h = jax.nn.silu(h) if cfg.act == "silu" else jax.nn.gelu(h)
+    all_out = jnp.einsum("etf,efd->etd", h * u, params["w_down"])  # [E, T, D]
+
+    combine = jnp.zeros((t, cfg.num_experts), jnp.float32)
+    combine = jax.vmap(
+        lambda c, e_i, w_i: c.at[e_i].add(w_i), in_axes=(0, 0, 0)
+    )(combine, top_e, top_w)
+    y = jnp.einsum("te,etd->td", combine.astype(all_out.dtype), all_out)
+    return y.reshape(b, s, d).astype(x.dtype)

@@ -1,0 +1,272 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Train path: the chunked SSD algorithm — intra-chunk "attention-like"
+quadratic term plus an inter-chunk recurrence over compressed states —
+a faithful port of the paper's minimal SSD reference, with the chunk
+recurrence expressed as a lax.scan (TPU-friendly: every term is a dense
+einsum on MXU-aligned tiles; the sequential dimension is S/chunk, not S).
+
+Decode path: the equivalent linear recurrence,
+    h' = exp(dt·A) h + dt · B ⊗ x,   y = C·h' + D_skip·x,
+carrying (conv_state, ssm_state) per layer.
+
+Feature distribution (DESIGN.md §5): the SSD head axis is the partitioned
+feature dimension (``ssm_heads`` -> model axis); B/C are grouped (one group
+here, like mamba2's default n_groups=1 per-device groups) and replicated,
+so inter-chip traffic is only the output projection's reduction — the
+inner recurrence is chip-local, exactly the property the paper's feature
+partition gives the linear model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_rms_scale, rms_norm
+from repro.models.unroll import scan_unroll
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64  # SSD "P"
+    conv_width: int = 4
+    chunk: int = 256
+    norm_eps: float = 1e-6
+    # §Perf lever: SSD einsum operand dtype ("float32" faithful default;
+    # "bfloat16" streams operands at half the HBM bytes with f32
+    # accumulation via preferred_element_type)
+    compute_dtype: str = "float32"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+
+def init_ssm(key, cfg: SSMConfig, dtype) -> dict:
+    kin, kout, kconv, kdt = jax.random.split(key, 4)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.num_heads
+    # in_proj emits [z (gate, di), x (di), B (n), C (n), dt (h)]
+    proj_out = 2 * di + 2 * n + h
+    s_in = d ** -0.5
+    conv_dim = di + 2 * n  # x, B, C go through the depthwise conv
+    return {
+        "in_proj": (jax.random.normal(kin, (d, proj_out)) * s_in).astype(dtype),
+        "conv_w": (jax.random.normal(kconv, (cfg.conv_width, conv_dim)) * 0.3).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": init_rms_scale(di),
+        "out_proj": (jax.random.normal(kout, (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _split_proj(proj, cfg: SSMConfig):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.num_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n :]
+    return z, xbc, dt
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: [..., L] -> [..., L, L] lower-triangular pairwise segment sums."""
+    l = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    seg = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H] (post-softplus)
+    a: jax.Array,  # [H] (negative)
+    bmat: jax.Array,  # [B, S, N]
+    cmat: jax.Array,  # [B, S, N]
+    chunk: int,
+    ctx=None,
+    compute_dtype: str = "float32",
+) -> jax.Array:
+    """Chunked SSD scan; returns y [B, S, H, P].
+
+    Sequences that don't divide the chunk size are zero-padded at the end
+    (dt=0 => decay 1, zero input: padding is inert) and sliced back."""
+    b, s0, h, p = x.shape
+    n = bmat.shape[-1]
+    pad = (-s0) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    s = s0 + pad
+    c = s // chunk
+
+    # discretized decay per step: alpha = dt * a  (log-space), [B, S, H]
+    la = dt * a[None, None, :]
+    xd = x * dt[..., None]  # input discretization
+
+    # chunked views
+    la_c = la.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # [B, H, C, L]
+    x_c = xd.reshape(b, c, chunk, h, p)  # [B, C, L, H, P]
+    b_c = bmat.reshape(b, c, chunk, n)  # [B, C, L, N]
+    c_c = cmat.reshape(b, c, chunk, n)
+
+    la_cum = jnp.cumsum(la_c, axis=-1)  # [B, H, C, L]
+
+    cdt = jnp.dtype(compute_dtype)
+    f32 = jnp.float32
+
+    # 1) intra-chunk (quadratic-in-chunk attention-like term)
+    lmat = jnp.exp(_segsum(la_c)).astype(cdt)  # [B, H, C, L, L]
+    y_diag = jnp.einsum(
+        "bcln,bcsn,bhcls,bcshp->bclhp",
+        c_c.astype(cdt), b_c.astype(cdt), lmat, x_c.astype(cdt),
+        preferred_element_type=f32,
+    )
+
+    # 2) per-chunk compressed states
+    decay_states = jnp.exp(la_cum[..., -1:] - la_cum)  # [B, H, C, L]
+    states = jnp.einsum(
+        "bcln,bhcl,bclhp->bchpn",
+        b_c.astype(cdt), decay_states.astype(cdt), x_c.astype(cdt),
+        preferred_element_type=f32,
+    )
+
+    # 3) inter-chunk recurrence over compressed states (sequential in C only)
+    chunk_decay = jnp.exp(la_cum[..., -1])  # [B, H, C]
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp  # [B, H, P, N], [B, H]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    states_t = states.transpose(1, 0, 2, 3, 4)  # [C, B, H, P, N]
+    decay_t = chunk_decay.transpose(2, 0, 1)  # [C, B, H]
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        scan_fn, h0, (states_t.astype(jnp.float32), decay_t), unroll=scan_unroll(c)
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # [B, C, H, P, N] (state entering chunk)
+
+    # 4) inter-chunk output contribution
+    state_decay_out = jnp.exp(la_cum)  # [B, H, C, L]
+    y_off = jnp.einsum(
+        "bcln,bchpn,bhcl->bclhp",
+        c_c.astype(cdt), h_prevs.astype(cdt), state_decay_out.astype(cdt),
+        preferred_element_type=f32,
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y[:, :s0] if pad else y
+
+
+def ssm_train(params: dict, x: jax.Array, cfg: SSMConfig, ctx) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.d_state, cfg.num_heads, cfg.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    # depthwise causal conv over (x, B, C)
+    w = params["conv_w"]  # [W, conv_dim]
+    pad = jnp.pad(xbc, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + s, :] * w[i][None, None, :] for i in range(cfg.conv_width)
+    )
+    conv = jax.nn.silu(conv + params["conv_b"][None, None, :])
+
+    xs = conv[..., :di].reshape(b, s, h, p)
+    xs = ctx.constrain(xs, "batch", None, "ssm_heads", None)
+    bmat = conv[..., di : di + n]
+    cmat = conv[..., di + n :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(params["a_log"])  # [H]
+
+    y = ssd_chunked(
+        xs.astype(jnp.float32), dt, a,
+        bmat.astype(jnp.float32), cmat.astype(jnp.float32), cfg.chunk, ctx,
+        compute_dtype=cfg.compute_dtype,
+    )
+    y = y + xs.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return ctx.constrain(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent form)
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(batch: int, cfg: SSMConfig, dtype, ctx) -> dict:
+    conv_dim = cfg.d_inner + 2 * cfg.d_state
+    return {
+        "conv": ctx.constrain(
+            jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+            "batch", None, None,
+        ),
+        "state": ctx.constrain(
+            jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.d_state), jnp.float32),
+            "batch", "ssm_heads", None, None,
+        ),
+    }
+
+
+def ssm_decode(
+    params: dict,
+    x: jax.Array,  # [B, 1, D]
+    cache: dict,
+    cfg: SSMConfig,
+    ctx,
+) -> tuple[jax.Array, dict]:
+    b, one, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.d_state, cfg.num_heads, cfg.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])[:, 0]  # [B, E]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    # conv state update: window = [cache, current]
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # [B, W, C]
+    conv = jnp.einsum("bwc,wc->bc", win, params["conv_w"]) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+    new_conv = win[:, 1:, :]
+
+    xs = conv[:, :di].reshape(b, h, p)
+    bvec = conv[:, di : di + n].astype(jnp.float32)  # [B, N]
+    cvec = conv[:, di + n :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [B, H]
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a[None, :])  # [B, H]
+
+    xd = xs.astype(jnp.float32) * dt[..., None]  # [B, H, P]
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xd, bvec
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cvec)
+    y = y + xs.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di)
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)[:, None, :]
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    out = ctx.constrain(out, "batch", None, "embed")
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,538 @@
+"""Composable decoder stack covering all six architecture families.
+
+A model is a repeating *pattern* of layer templates (configs/base.py):
+dense LMs repeat (global attention, dense FFN); gemma2 repeats
+(local, dense), (global, dense); jamba repeats an 8-layer super-block of
+mamba/attention mixers with alternating dense/MoE FFNs; mamba2 repeats a
+pure SSD block.  Parameters for each pattern position are stacked along a
+leading repeat axis and the stack is driven by ``lax.scan`` (small HLO,
+fast compiles at 64 layers) with full per-superblock rematerialization.
+
+Three execution modes share the layer code:
+  * ``forward``     — training/scoring forward pass, logits over all positions
+  * ``prefill``     — forward + returns the serving cache (KV / SSM states)
+  * ``decode_step`` — one token in, one logits row out, cache updated in place
+
+Sharding: all tensors are annotated with logical axes (sharding/specs.py);
+``make_ctx`` degrades any rule whose dimension doesn't divide the mesh axis
+to replication, so every (arch x mesh) combination lowers; the degradations
+are the recorded baseline the §Perf loop then attacks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerTemplate, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    embed_tokens,
+    init_embedding,
+    init_mlp,
+    init_rms_scale,
+    lm_logits,
+    mlp,
+    rms_norm,
+)
+from repro.models.unroll import scan_unroll
+from repro.sharding.specs import RULES, ShardingCtx
+
+
+# ---------------------------------------------------------------------------
+# Config plumbing
+# ---------------------------------------------------------------------------
+
+
+def make_ctx(mesh, cfg: ModelConfig, overrides: dict | None = None) -> ShardingCtx:
+    """Sharding context for one (model, mesh) pair.
+
+    Head/kv-head counts that don't divide the ``model`` axis stay sharded —
+    GSPMD pads (e.g. qwen3's 40 q-heads become 48 lanes, a 20% attention
+    overcount recorded in EXPERIMENTS.md) which beats the 16x redundant
+    compute of replication.  MQA (kv=1) k/v stay replicated.  Axes that are
+    genuinely degenerate (dim < tp with heavy padding cost) degrade to
+    replication.
+    """
+    rules = dict(RULES)
+    if mesh is not None:
+        tp = mesh.shape.get("model", 1)
+
+        def degrade(rule_name: str, dim: int):
+            if dim and dim % tp != 0:
+                rules[rule_name] = None
+
+        if not cfg.shard_heads or (cfg.num_heads and cfg.num_heads < tp // 2):
+            rules["heads"] = None
+        if cfg.num_kv_heads and cfg.num_kv_heads < tp // 2:
+            rules["kv_heads"] = None  # MQA/few-kv: replicate k/v activations
+        degrade("experts", cfg.num_experts)
+        degrade("mlp", cfg.d_ff)
+        degrade("vocab", padded_vocab(cfg, tp))
+        if cfg.has_ssm:
+            degrade("ssm_heads", (cfg.ssm_expand * cfg.d_model) // cfg.ssm_head_dim)
+    if overrides:
+        rules.update(overrides)
+    return ShardingCtx(mesh=mesh, rules=rules)
+
+
+def padded_vocab(cfg: ModelConfig, tp: int = 16) -> int:
+    v = cfg.vocab_size
+    if v % tp == 0:
+        return v
+    mult = 256
+    return ((v + mult - 1) // mult) * mult
+
+
+def attn_config(cfg: ModelConfig, tmpl: LayerTemplate) -> attn_lib.AttnConfig:
+    return attn_lib.AttnConfig(
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm,
+        window=cfg.sliding_window if tmpl.mixer == "local" else None,
+        attn_softcap=cfg.attn_softcap,
+        norm_eps=cfg.norm_eps,
+        kv_chunk=cfg.attn_kv_chunk,
+        q_chunk=cfg.attn_q_chunk,
+    )
+
+
+def ssm_config(cfg: ModelConfig) -> ssm_lib.SSMConfig:
+    return ssm_lib.SSMConfig(
+        d_model=cfg.d_model,
+        d_state=cfg.ssm_state,
+        expand=cfg.ssm_expand,
+        head_dim=cfg.ssm_head_dim,
+        conv_width=cfg.ssm_conv,
+        chunk=cfg.ssm_chunk,
+        norm_eps=cfg.norm_eps,
+        compute_dtype=cfg.ssm_compute_dtype,
+    )
+
+
+def moe_config(cfg: ModelConfig) -> moe_lib.MoEConfig:
+    return moe_lib.MoEConfig(
+        d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff,
+        num_experts=cfg.num_experts,
+        top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor,
+        act=cfg.act,
+    )
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, tmpl: LayerTemplate) -> dict:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": init_rms_scale(cfg.d_model)}
+    if tmpl.mixer in ("global", "local"):
+        p["attn"] = attn_lib.init_attention(keys[0], cfg.d_model, attn_config(cfg, tmpl), dtype)
+    elif tmpl.mixer == "ssm":
+        p["ssm"] = ssm_lib.init_ssm(keys[0], ssm_config(cfg), dtype)
+    else:
+        raise ValueError(tmpl.mixer)
+    if cfg.post_norm:
+        p["norm1_post"] = init_rms_scale(cfg.d_model)
+    if tmpl.ffn == "dense":
+        p["norm2"] = init_rms_scale(cfg.d_model)
+        p["ffn"] = init_mlp(keys[1], cfg.d_model, cfg.d_ff, dtype, gated=cfg.mlp_gated)
+    elif tmpl.ffn == "moe":
+        p["norm2"] = init_rms_scale(cfg.d_model)
+        p["moe"] = moe_lib.init_moe(keys[1], moe_config(cfg), dtype)
+    elif tmpl.ffn != "none":
+        raise ValueError(tmpl.ffn)
+    if cfg.post_norm and tmpl.ffn != "none":
+        p["norm2_post"] = init_rms_scale(cfg.d_model)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, tp: int = 16) -> dict:
+    dtype = _dtype(cfg)
+    kemb, kblocks, khead, kfront = jax.random.split(key, 4)
+    vpad = padded_vocab(cfg, tp)
+
+    params: dict[str, Any] = {}
+    if cfg.modality == "audio-codec":
+        ks = jax.random.split(kemb, cfg.num_codebooks)
+        params["embed"] = jnp.stack(
+            [init_embedding(k, vpad, cfg.d_model, dtype) for k in ks]
+        )  # [K, V, D]
+        params["lm_head"] = jnp.stack(
+            [
+                (jax.random.normal(k, (cfg.d_model, vpad)) * cfg.d_model ** -0.5).astype(dtype)
+                for k in jax.random.split(khead, cfg.num_codebooks)
+            ]
+        )  # [K, D, V]
+    else:
+        params["embed"] = init_embedding(kemb, vpad, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(khead, (cfg.d_model, vpad)) * cfg.d_model ** -0.5
+            ).astype(dtype)
+    if cfg.modality == "vision":
+        params["vision_proj"] = (
+            jax.random.normal(kfront, (cfg.frontend_dim, cfg.d_model))
+            * cfg.frontend_dim ** -0.5
+        ).astype(dtype)
+
+    # blocks: one stacked pytree per pattern position, leaves [R, ...]
+    r = cfg.num_repeats
+    blocks = []
+    for pi, tmpl in enumerate(cfg.pattern):
+        kp = jax.random.fold_in(kblocks, pi)
+        stacked = jax.vmap(
+            lambda k: _init_block(k, cfg, tmpl)
+        )(jax.random.split(kp, r))
+        blocks.append(stacked)
+    params["blocks"] = tuple(blocks)
+    params["final_norm"] = init_rms_scale(cfg.d_model)
+    return params
+
+
+def param_specs(params, cfg: ModelConfig, ctx: ShardingCtx, zero1: bool = True):
+    """PartitionSpec pytree for the parameter pytree.
+
+    Feature axes ride the ``model`` axis (the paper's partition); when
+    ``zero1`` a remaining large axis is additionally sharded over the data
+    axes, which is where master params / optimizer state live (ZeRO-1).
+    Block leaves carry a leading stacked repeat axis (always replicated).
+    """
+    z = "zero1" if zero1 else None
+
+    def spec_of(kp, x) -> Any:
+        path = jax.tree_util.keystr(kp)
+        nd = x.ndim
+        in_blocks = "blocks" in path
+
+        def s(*names):  # block leaf: leading repeat axis
+            assert len(names) + 1 == nd, (path, nd, names)
+            return ctx.spec_div(tuple(x.shape), None, *names)
+
+        if "vision_proj" in path:
+            return ctx.spec_div(tuple(x.shape), z, None)
+        if "embed" in path:
+            if cfg.modality == "audio-codec":
+                return ctx.spec_div(tuple(x.shape), None, "vocab", z)
+            return ctx.spec_div(tuple(x.shape), "vocab", z)
+        if "lm_head" in path:
+            if cfg.modality == "audio-codec":
+                return ctx.spec_div(tuple(x.shape), None, z, "vocab")
+            return ctx.spec_div(tuple(x.shape), z, "vocab")
+        if not in_blocks:  # final_norm etc.
+            return ctx.spec(*([None] * nd))
+        if path.endswith("wq']"):
+            return s(z, "heads", None)
+        if path.endswith("wk']") or path.endswith("wv']"):
+            return s(z, "kv_heads", None)
+        if path.endswith("wo']"):
+            return s("heads", None, z)
+        if "w_gate" in path or "w_up" in path:
+            if nd == 4:  # stacked expert weights [R, E, D, F]
+                return s("experts", z, "expert_mlp")
+            return s(z, "mlp")
+        if "w_down" in path:
+            if nd == 4:
+                return s("experts", "expert_mlp", z)
+            return s("mlp", z)
+        if "router" in path or "in_proj" in path or "out_proj" in path:
+            return s(z, None)
+        # norms, conv weights, scalars: replicated beyond the repeat axis
+        return ctx.spec(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def cache_specs(cfg: ModelConfig, ctx: ShardingCtx):
+    """PartitionSpec pytree matching init_cache's structure."""
+    out = []
+    for tmpl in cfg.pattern:
+        if tmpl.mixer in ("global", "local"):
+            out.append({
+                "k": ctx.spec(None, "batch", "seq_kv", None, None),
+                "v": ctx.spec(None, "batch", "seq_kv", None, None),
+            })
+        else:
+            out.append({
+                "conv": ctx.spec(None, "batch", None, None),
+                "state": ctx.spec(None, "batch", "ssm_heads", None, None),
+            })
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Embedding of model inputs
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: dict, ctx: ShardingCtx):
+    """-> (x [B, S, D], positions [B, S], loss_mask [B, S])."""
+    if cfg.modality == "vision":
+        tokens = batch["tokens"]  # [B, S_text]
+        patches = batch["patch_embeds"]  # [B, P, frontend_dim]
+        tx = embed_tokens(params["embed"], tokens, ctx, cfg.embed_scale)
+        px = jnp.einsum("bpf,fd->bpd", patches.astype(tx.dtype), params["vision_proj"])
+        px = ctx.constrain(px, "batch", None, "embed")
+        x = jnp.concatenate([px, tx], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        loss_mask = jnp.concatenate(
+            [jnp.zeros((b, patches.shape[1])), jnp.ones((b, tokens.shape[1]))], axis=1
+        )
+        return x, positions, loss_mask
+    if cfg.modality == "audio-codec":
+        tokens = batch["tokens"]  # [B, S, K]
+        b, s, k = tokens.shape
+        x = jnp.zeros((b, s, cfg.d_model), _dtype(cfg))
+        for i in range(cfg.num_codebooks):
+            x = x + params["embed"][i][tokens[:, :, i]]
+        x = ctx.constrain(x, "batch", "seq", "embed")
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        return x, positions, jnp.ones((b, s))
+    tokens = batch["tokens"]  # [B, S]
+    x = embed_tokens(params["embed"], tokens, ctx, cfg.embed_scale)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, positions, jnp.ones((b, s))
+
+
+def output_logits(params, cfg: ModelConfig, x: jax.Array, ctx: ShardingCtx):
+    if cfg.modality == "audio-codec":
+        outs = [
+            lm_logits(x, params["lm_head"][i], tied=False, cap=cfg.logit_softcap, ctx=ctx)
+            for i in range(cfg.num_codebooks)
+        ]
+        return jnp.stack(outs, axis=2)  # [B, S, K, V]
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return lm_logits(x, table, tied=cfg.tie_embeddings, cap=cfg.logit_softcap, ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+
+_ZERO_AUX = {"lb_loss": 0.0, "z_loss": 0.0, "overflow_frac": 0.0}
+
+
+def _apply_block_train(
+    tmpl: LayerTemplate, p, x, positions, cfg: ModelConfig, ctx, collect_cache: bool
+):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    cache_out = None
+    if tmpl.mixer in ("global", "local"):
+        y, (k, v) = attn_lib.attention_train(p["attn"], h, positions, attn_config(cfg, tmpl), ctx)
+        if collect_cache:
+            cache_out = {
+                "k": ctx.constrain(k, "batch", "seq_kv", None, None),
+                "v": ctx.constrain(v, "batch", "seq_kv", None, None),
+            }
+    else:
+        y = ssm_lib.ssm_train(p["ssm"], h, ssm_config(cfg), ctx)
+        if collect_cache:
+            cache_out = ssm_prefill_cache(p["ssm"], h, cfg, ctx)
+    if cfg.post_norm:
+        y = rms_norm(y, p["norm1_post"], cfg.norm_eps)
+    x = x + y
+    aux = dict(_ZERO_AUX)
+    if tmpl.ffn != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if tmpl.ffn == "dense":
+            y = mlp(p["ffn"], h, cfg.act, ctx)
+        else:
+            y, aux = moe_lib.moe_ffn(p["moe"], h, moe_config(cfg), ctx)
+        if cfg.post_norm:
+            y = rms_norm(y, p["norm2_post"], cfg.norm_eps)
+        x = x + y
+    return x, aux, cache_out
+
+
+def ssm_prefill_cache(p, h, cfg: ModelConfig, ctx):
+    """Recompute the final SSM state for serving after a prefill pass.
+
+    Cheap relative to the main pass (one extra projection + recurrence on
+    the compressed states); keeps ssm_train itself cache-free for training.
+    """
+    scfg = ssm_config(cfg)
+    b, s, _ = h.shape
+    di, n = scfg.d_inner, scfg.d_state
+    proj = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    z, xbc, dt_raw = ssm_lib._split_proj(proj, scfg)
+    pad = jnp.pad(xbc, ((0, 0), (scfg.conv_width - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + s, :] * p["conv_w"][i][None, None, :]
+        for i in range(scfg.conv_width)
+    )
+    conv = jax.nn.silu(conv + p["conv_b"][None, None, :])
+    xs = conv[..., :di].reshape(b, s, scfg.num_heads, scfg.head_dim)
+    bmat = conv[..., di : di + n].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    la = dt * a[None, None, :]  # [B, S, H]
+    # state = sum_s exp(sum_{s'>s} la) * dt_s * B_s (x) x_s
+    rev_cum = jnp.cumsum(la[:, ::-1, :], axis=1)[:, ::-1, :] - la
+    decay = jnp.exp(rev_cum)  # [B, S, H]
+    xd = xs.astype(jnp.float32) * dt[..., None]
+    state = jnp.einsum("bsh,bshp,bsn->bhpn", decay, xd, bmat)
+    if s >= scfg.conv_width - 1:
+        conv_tail = xbc[:, -(scfg.conv_width - 1):, :]
+    else:
+        conv_tail = jnp.pad(xbc, ((0, 0), (scfg.conv_width - 1 - s, 0), (0, 0)))
+    return {
+        "conv": conv_tail,
+        "state": ctx.constrain(state, "batch", "ssm_heads", None, None),
+    }
+
+
+def _apply_block_decode(tmpl: LayerTemplate, p, x, cache, pos, cfg: ModelConfig, ctx):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if tmpl.mixer in ("global", "local"):
+        y, new_cache = attn_lib.attention_decode(
+            p["attn"], h, cache, pos, attn_config(cfg, tmpl), ctx
+        )
+    else:
+        y, new_cache = ssm_lib.ssm_decode(p["ssm"], h, cache, ssm_config(cfg), ctx)
+    if cfg.post_norm:
+        y = rms_norm(y, p["norm1_post"], cfg.norm_eps)
+    x = x + y
+    if tmpl.ffn != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if tmpl.ffn == "dense":
+            y = mlp(p["ffn"], h, cfg.act, ctx)
+        else:
+            y, _ = moe_lib.moe_ffn(p["moe"], h, moe_config(cfg), ctx)
+        if cfg.post_norm:
+            y = rms_norm(y, p["norm2_post"], cfg.norm_eps)
+        x = x + y
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full model: forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, batch: dict, ctx: ShardingCtx):
+    """-> (logits, aux).  aux carries MoE losses and the loss mask."""
+    x, positions, loss_mask = embed_inputs(params, cfg, batch, ctx)
+
+    def body(carry, block_params):
+        x, aux_acc = carry
+        x = ctx.constrain(x, "batch", "seq", "embed")
+        for tmpl, p in zip(cfg.pattern, block_params):
+            x, aux, _ = _apply_block_train(tmpl, p, x, positions, cfg, ctx, False)
+            aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+        return (x, aux_acc), None
+
+    body = jax.checkpoint(body)
+    aux0 = {k: jnp.zeros((), jnp.float32) for k in _ZERO_AUX}
+    (x, aux), _ = jax.lax.scan(
+        body, (x, aux0), params["blocks"], unroll=scan_unroll(cfg.num_repeats)
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = output_logits(params, cfg, x, ctx)
+    aux = dict(aux)
+    aux["loss_mask"] = loss_mask
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, ctx: ShardingCtx, tp: int = 16):
+    """Stacked cache pytree: tuple over pattern positions, leaves [R, ...]."""
+    dtype = _dtype(cfg)
+
+    def one(tmpl: LayerTemplate):
+        if tmpl.mixer in ("global", "local"):
+            return attn_lib.init_kv_cache(batch, max_len, attn_config(cfg, tmpl), dtype, ctx)
+        return ssm_lib.init_ssm_cache(batch, ssm_config(cfg), dtype, ctx)
+
+    r = cfg.num_repeats
+    caches = []
+    for tmpl in cfg.pattern:
+        c = one(tmpl)
+        caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (r,) + a.shape), c))
+    return tuple(caches)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, ctx: ShardingCtx, extra: dict | None = None):
+    """tokens: [B, 1] (or [B, 1, K] audio); pos: scalar int32 position.
+    -> (logits [B, 1, (K,) V], new_cache)."""
+    if cfg.modality == "vision":
+        # decode path: text token only; patches were consumed at prefill
+        x = embed_tokens(params["embed"], tokens, ctx, cfg.embed_scale)
+    elif cfg.modality == "audio-codec":
+        b, one, k = tokens.shape
+        x = jnp.zeros((b, 1, cfg.d_model), _dtype(cfg))
+        for i in range(cfg.num_codebooks):
+            x = x + params["embed"][i][tokens[:, :, i]]
+    else:
+        x = embed_tokens(params["embed"], tokens, ctx, cfg.embed_scale)
+
+    def body(x, xs):
+        block_params, block_cache = xs
+        new_caches = []
+        for tmpl, p, c in zip(cfg.pattern, block_params, block_cache):
+            x, c_new = _apply_block_decode(tmpl, p, x, c, pos, cfg, ctx)
+            new_caches.append(c_new)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["blocks"], cache), unroll=scan_unroll(cfg.num_repeats)
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = output_logits(params, cfg, x, ctx)
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int, ctx: ShardingCtx):
+    """Forward pass that also builds the serving cache.
+
+    Returns (last_logits [B, 1, ...], cache with the prefix written and
+    room up to max_len)."""
+    x, positions, _ = embed_inputs(params, cfg, batch, ctx)
+    b, s, _ = x.shape
+
+    def body(x, block_params):
+        x = ctx.constrain(x, "batch", "seq", "embed")
+        caches = []
+        for tmpl, p in zip(cfg.pattern, block_params):
+            x, _, c = _apply_block_train(tmpl, p, x, positions, cfg, ctx, True)
+            caches.append(c)
+        return x, tuple(caches)
+
+    body = jax.checkpoint(body)
+    x, cache = jax.lax.scan(
+        body, x, params["blocks"], unroll=scan_unroll(cfg.num_repeats)
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = output_logits(params, cfg, x[:, -1:, :], ctx)
+
+    # pad KV caches out to max_len so decode can continue
+    if max_len > s:
+        def pad_cache(c):
+            def pad_leaf(a, name):
+                if name in ("k", "v"):
+                    widths = [(0, 0)] * a.ndim
+                    widths[2] = (0, max_len - s)  # [R, B, S, Hkv, Dh]
+                    return ctx.constrain(
+                        jnp.pad(a, widths), None, "batch", "seq_kv", None, None
+                    )
+                return a
+            return {k: pad_leaf(v, k) for k, v in c.items()}
+        cache = tuple(pad_cache(c) for c in cache)
+    return logits, cache

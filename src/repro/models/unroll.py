@@ -1,0 +1,34 @@
+"""Roofline unroll mode.
+
+XLA's ``cost_analysis`` counts a ``while`` body ONCE, regardless of trip
+count, so scan-based models under-report FLOPs/bytes/collectives by the
+trip count.  For roofline extraction the dry-run compiles a reduced-depth
+variant with every scan fully unrolled (trip-count-1 loops carry the whole
+body, so the costs are exact) and extrapolates linearly in the repeat
+count; the production scan compile is still what proves memory fit.
+
+``unrolled()`` flips every lax.scan in the model stack (layer stack,
+attention kv chunks, SSD chunk recurrence, grad-accum microbatches) to
+full unroll.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+_FULL_UNROLL = False
+
+
+def scan_unroll(length: int) -> int:
+    return length if _FULL_UNROLL else 1
+
+
+@contextlib.contextmanager
+def unrolled():
+    global _FULL_UNROLL
+    prev = _FULL_UNROLL
+    _FULL_UNROLL = True
+    try:
+        yield
+    finally:
+        _FULL_UNROLL = prev

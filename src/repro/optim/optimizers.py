@@ -1,0 +1,143 @@
+"""Hand-rolled optimizers (no optax in this container).
+
+Optax-like API: ``init(params) -> state``, ``update(grads, state, params)
+-> (updates, state)``; apply with ``apply_updates``.  All states are f32
+pytrees mirroring the parameter tree, so the ZeRO-1 parameter sharding
+specs apply verbatim to optimizer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        return jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": _zeros_like_f32(params)}
+
+    def update(grads, state, params):
+        m = jax.tree.map(
+            lambda mi, g: beta * mi + g.astype(jnp.float32), state["m"], grads
+        )
+        return jax.tree.map(lambda mi: -lr * mi, m), {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return {
+            "m": _zeros_like_f32(params),
+            "v": _zeros_like_f32(params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(
+            lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads,
+        )
+        v = jax.tree.map(
+            lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads,
+        )
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(mi, vi, p):
+            step = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step
+
+        return jax.tree.map(upd, m, v, params), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SVRG for deep models — the paper's optimizer generalized
+# ---------------------------------------------------------------------------
+
+
+class SVRGState(NamedTuple):
+    anchor_params: Any  # w̃_0
+    anchor_grad: Any  # z = full (large-batch) gradient at the anchor
+    inner: Any  # wrapped optimizer state
+
+
+def svrg(base: Optimizer) -> Optimizer:
+    """Variance-reduced wrapper: callers must compute, per step, BOTH the
+    minibatch gradient at the current params and at the anchor params, and
+    pass ``grads = (g_current, g_anchor)``.  The update applied is
+
+        g_vr = g_current - g_anchor + z      (Algorithm 2 line 7)
+
+    Refresh the anchor with :func:`svrg_refresh` every epoch (outer loop).
+    """
+
+    def init(params):
+        return SVRGState(
+            anchor_params=jax.tree.map(lambda p: p, params),
+            anchor_grad=_zeros_like_f32(params),
+            inner=base.init(params),
+        )
+
+    def update(grads, state: SVRGState, params):
+        g_cur, g_anc = grads
+        g_vr = jax.tree.map(
+            lambda gc, ga, z: gc.astype(jnp.float32)
+            - ga.astype(jnp.float32)
+            + z,
+            g_cur, g_anc, state.anchor_grad,
+        )
+        updates, inner = base.update(g_vr, state.inner, params)
+        return updates, SVRGState(state.anchor_params, state.anchor_grad, inner)
+
+    return Optimizer(init, update)
+
+
+def svrg_refresh(state: SVRGState, params, full_grad) -> SVRGState:
+    return SVRGState(
+        anchor_params=jax.tree.map(lambda p: p, params),
+        anchor_grad=jax.tree.map(lambda g: g.astype(jnp.float32), full_grad),
+        inner=state.inner,
+    )
+
+
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum, "adamw": adamw}

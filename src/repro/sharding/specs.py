@@ -1,0 +1,129 @@
+"""Logical-axis sharding rules (the feature-distributed principle, applied).
+
+The paper's insight — partition parameters along *feature* dimensions so
+that cross-worker communication is activation reductions (inner products)
+rather than parameter/gradient vectors — generalizes to every architecture
+in the pool as Megatron-style tensor parallelism over the ``model`` mesh
+axis.  This module is the single source of truth for which logical axis of
+which tensor carries that partition.
+
+Rules are expressed MaxText-style: tensors are annotated with logical axis
+names; ``spec()`` resolves them against the current mesh (axes absent from
+the mesh resolve to replication, so one model definition serves the
+single-pod (data, model), the multi-pod (pod, data, model), and the
+single-device test meshes unchanged).
+
+Parameter master/optimizer state is additionally sharded over the data
+axes (ZeRO-1): see ``param_spec(zero1=True)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (tuples mean "sharded over both, major first")
+RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,               # sequence stays unsharded between layers (baseline);
+    "seq_kv": "model",         # decode KV cache: sequence split-K over model
+                               # (long_500k overrides to ("data","model"))
+    "embed": None,             # d_model replicated (Megatron TP pattern)
+    "heads": "model",          # q heads  — the feature partition in attention
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",            # FFN hidden — the feature partition in MLPs
+    "experts": "model",        # expert parallelism
+    "expert_mlp": None,
+    "vocab": "model",          # LM head / embedding feature partition
+    "ssm_inner": "model",      # SSD inner channels — feature partition for SSMs
+    "ssm_heads": "model",      # SSD head axis
+    "ssm_state": None,
+    "conv_width": None,
+    "codebooks": None,
+    "patches": None,
+    "zero1": ("pod", "data"),  # extra partition for master params/opt state
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """Resolves logical axis names against a mesh; no-ops when mesh is None."""
+
+    mesh: Mesh | None
+    rules: dict = dataclasses.field(default_factory=lambda: dict(RULES))
+    # when False, constraints become identity (single-device smoke tests)
+    enable: bool = True
+
+    def _resolve_one(self, name: str | None):
+        if name is None:
+            return None
+        mapped = self.rules.get(name, None)
+        if mapped is None:
+            return None
+        axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        present = tuple(a for a in axes if a in self.mesh.shape)
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+
+    def spec(self, *names: str | None) -> P:
+        if self.mesh is None:
+            return P()
+        return P(*(self._resolve_one(n) for n in names))
+
+    def spec_div(self, shape: tuple[int, ...], *names: str | None) -> P:
+        """Like spec(), but drops axes whose dimension doesn't divide the
+        mesh-axis product.  jit *argument* shardings require divisibility
+        (activations under with_sharding_constraint may be padded; arrays
+        crossing the jit boundary may not)."""
+        if self.mesh is None:
+            return P()
+        assert len(shape) == len(names), (shape, names)
+        out = []
+        for dim, n in zip(shape, names):
+            axes = self._resolve_one(n)
+            if axes is None:
+                out.append(None)
+                continue
+            ax = (axes,) if isinstance(axes, str) else axes
+            size = 1
+            for a in ax:
+                size *= self.mesh.shape[a]
+            out.append(axes if dim % size == 0 else None)
+        return P(*out)
+
+    def sharding(self, *names: str | None) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*names))
+
+    def constrain(self, x: jax.Array, *names: str | None) -> jax.Array:
+        """with_sharding_constraint by logical names (no-op without a mesh)."""
+        if self.mesh is None or not self.enable:
+            return x
+        assert len(names) == x.ndim, (names, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*names))
+        )
+
+
+def unsharded_ctx() -> ShardingCtx:
+    return ShardingCtx(mesh=None)
+
+
+def axis_size(mesh: Mesh | None, logical: str) -> int:
+    """Product of mesh-axis sizes behind a logical axis (1 without a mesh)."""
+    if mesh is None:
+        return 1
+    mapped = RULES.get(logical)
+    if mapped is None:
+        return 1
+    axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size

@@ -1,0 +1,217 @@
+"""train_step / eval_step factories: loss, grad-accum, mixed precision,
+ZeRO-1 parameter layout.
+
+Layout contract (see DESIGN.md §6):
+  * master params live f32, sharded feature-dim over ``model`` AND over the
+    data axes (``zero1``);
+  * each step casts to the compute dtype and re-constrains to the
+    feature-only sharding (GSPMD emits the ZeRO all-gathers);
+  * gradients come back feature-sharded, the optimizer update runs on the
+    fully-sharded layout (reduce-scatter over data is implicit in the
+    output sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.optim.optimizers import Optimizer, apply_updates
+from repro.sharding.specs import ShardingCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    weight_decay: float = 0.0
+    grad_accum: int = 1
+    lb_coef: float = 0.01  # MoE load-balance aux
+    z_coef: float = 1e-3  # router z-loss
+    max_grad_norm: float | None = 1.0
+
+
+def cross_entropy(
+    logits: jax.Array,  # [B, S, V] or [B, S, K, V] (f32)
+    labels: jax.Array,  # [B, S] or [B, S, K] int32
+    mask: jax.Array,  # [B, S]
+    vocab_size: int,
+) -> jax.Array:
+    """Mean CE over unmasked positions; ignores padded vocab tail."""
+    if logits.ndim == 4 and labels.ndim == 3:
+        mask = mask[..., None]  # broadcast over codebooks
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, ctx: ShardingCtx, settings: TrainSettings):
+    logits, aux = transformer.forward(params, cfg, batch, ctx)
+    # next-token prediction: shift within the provided labels
+    labels = batch["labels"]
+    mask = aux["loss_mask"]
+    # drop the final position (no next token)
+    if logits.ndim == 4:
+        lo, la, ma = logits[:, :-1], labels[:, 1:], mask[:, 1:]
+    else:
+        lo, la, ma = logits[:, :-1], labels[:, 1:], mask[:, 1:]
+    ce = cross_entropy(lo, la, ma, cfg.vocab_size)
+    total = ce
+    if cfg.has_moe:
+        total = total + settings.lb_coef * aux["lb_loss"] + settings.z_coef * aux["z_loss"]
+    metrics = {
+        "loss": total,
+        "ce": ce,
+        "lb_loss": aux["lb_loss"],
+        "z_loss": aux["z_loss"],
+        "overflow_frac": aux["overflow_frac"],
+    }
+    return total, metrics
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    )
+    return jnp.sqrt(sum(leaves))
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    opt: Optimizer,
+    settings: TrainSettings,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": f32 master tree, "opt": opt state, "step": i32}.
+    Grad accumulation scans over the microbatch axis of ``batch`` leaves
+    shaped [A, mb, ...] when settings.grad_accum > 1.
+    """
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def cast_params(params):
+        # re-constrain to feature-only sharding (drops the zero1 axes);
+        # GSPMD emits the ZeRO all-gathers here.
+        casted = jax.tree.map(
+            lambda p: p.astype(compute_dtype) if p.ndim > 1 else p, params
+        )
+        if ctx.mesh is not None:
+            specs = transformer.param_specs(casted, cfg, ctx, zero1=False)
+            casted = jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, jax.sharding.NamedSharding(ctx.mesh, s)
+                ),
+                casted, specs,
+            )
+        return casted
+
+    grad_of = jax.grad(
+        lambda p, b: loss_fn(p, cfg, b, ctx, settings), has_aux=True
+    )
+
+    def constrain_grads(g, params_like):
+        """Gradients live in the ZeRO-1 (fully sharded) layout: each
+        microbatch's contribution is reduce-scattered over the data axes
+        instead of all-reduced, and the optimizer update is chip-local."""
+        if ctx.mesh is None:
+            return g
+        specs = transformer.param_specs(params_like, cfg, ctx, zero1=True)
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(ctx.mesh, s)
+            ),
+            g, specs,
+        )
+
+    def train_step(state, batch):
+        params = state["params"]
+        cparams = cast_params(params)
+
+        if settings.grad_accum > 1:
+            def micro(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grad_of(cparams, mb)
+                g = constrain_grads(g, cparams)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g
+                )
+                g_acc = constrain_grads(g_acc, cparams)
+                m_acc = jax.tree.map(lambda a, b_: a + b_, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = constrain_grads(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), cparams),
+                cparams,
+            )
+            m0 = {
+                "loss": 0.0, "ce": 0.0, "lb_loss": 0.0, "z_loss": 0.0,
+                "overflow_frac": 0.0,
+            }
+            m0 = jax.tree.map(lambda v: jnp.asarray(v, jnp.float32), m0)
+            from repro.models.unroll import scan_unroll
+            (grads, metrics), _ = jax.lax.scan(
+                micro, (g0, m0), batch, unroll=scan_unroll(settings.grad_accum)
+            )
+            denom = settings.grad_accum
+            grads = jax.tree.map(lambda g: g / denom, grads)
+            metrics = jax.tree.map(lambda m: m / denom, metrics)
+        else:
+            grads, metrics = grad_of(cparams, batch)
+            grads = constrain_grads(grads, cparams)
+
+        if settings.max_grad_norm is not None:
+            gnorm = _global_norm(grads)
+            scale = jnp.minimum(1.0, settings.max_grad_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+            metrics["grad_norm"] = gnorm
+
+        updates, opt_state = opt.update(grads, state["opt"], params)
+        new_params = apply_updates(params, updates)
+        if ctx.mesh is not None:
+            specs = transformer.param_specs(new_params, cfg, ctx, zero1=True)
+            new_params = jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, jax.sharding.NamedSharding(ctx.mesh, s)
+                ),
+                new_params, specs,
+            )
+        return (
+            {"params": new_params, "opt": opt_state, "step": state["step"] + 1},
+            metrics,
+        )
+
+    return train_step
+
+
+def init_state(cfg: ModelConfig, key, opt: Optimizer, tp: int = 16):
+    params = transformer.init_params(cfg, key, tp)
+    # master copy in f32 (compute casts down per step)
+    params = jax.tree.map(
+        lambda p: p.astype(jnp.float32) if p.dtype == jnp.bfloat16 else p, params
+    )
+    return {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def state_specs(state, cfg: ModelConfig, ctx: ShardingCtx):
+    """PartitionSpecs for the full train state (ZeRO-1 layout)."""
+    from jax.sharding import PartitionSpec as P
+
+    pspec = transformer.param_specs(state["params"], cfg, ctx, zero1=True)
+
+    opt_state = state["opt"]
+    if isinstance(opt_state, dict) and "m" in opt_state:
+        ospec = {k: (pspec if k in ("m", "v") else P()) for k in opt_state}
+    elif isinstance(opt_state, dict):
+        ospec = {k: P() for k in opt_state}
+    else:
+        ospec = jax.tree.map(lambda _: P(), opt_state)
+    return {"params": pspec, "opt": ospec, "step": P()}

@@ -1,0 +1,72 @@
+"""Serving: prefill + batched single-token decode."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.sharding.specs import ShardingCtx
+
+
+def make_serve_step(cfg: ModelConfig, ctx: ShardingCtx):
+    """serve_step(params, cache, tokens, pos) -> (next_tokens, logits, cache).
+
+    One decode step for a batch of requests at a shared position (the
+    dry-run decode shapes: KV cache of seq_len, ONE new token).  Greedy
+    sampling; a sampler module can replace argmax without touching the
+    model code.
+    """
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = transformer.decode_step(params, cfg, cache, tokens, pos, ctx)
+        # mask padded vocab tail before sampling
+        v = cfg.vocab_size
+        neg = jnp.asarray(-1e30, logits.dtype)
+        vpad = logits.shape[-1]
+        if vpad > v:
+            mask = jnp.arange(vpad) < v
+            logits = jnp.where(mask, logits, neg)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, logits, cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, ctx: ShardingCtx, max_len: int):
+    def prefill_step(params, batch):
+        return transformer.prefill(params, cfg, batch, max_len, ctx)
+
+    return prefill_step
+
+
+def greedy_generate(
+    params,
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    prompt: jax.Array,  # [B, S0] (or [B, S0, K] audio)
+    steps: int,
+    max_len: int,
+    extra: dict | None = None,
+):
+    """Prefill the prompt then decode ``steps`` greedy tokens (examples/tests)."""
+    batch = {"tokens": prompt, **(extra or {})}
+    _, cache = transformer.prefill(params, cfg, batch, max_len, ctx)
+    serve_step = make_serve_step(cfg, ctx)
+
+    pos0 = prompt.shape[1] + (cfg.num_patches if cfg.modality == "vision" else 0)
+    if cfg.modality == "audio-codec":
+        last = prompt[:, -1:, :]
+    else:
+        last = prompt[:, -1:]
+    tokens = []
+    tok = last
+    for i in range(steps):
+        pos = jnp.asarray(pos0 + i - 1, jnp.int32)
+        nxt, _, cache = serve_step(params, cache, tok, pos)
+        tok = nxt if cfg.modality == "audio-codec" else nxt[:, :]
+        tokens.append(tok)
+    return jnp.concatenate(tokens, axis=1)

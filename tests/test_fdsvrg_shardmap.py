@@ -1,0 +1,140 @@
+"""Tests for the deployable shard_map FD-SVRG (core/fdsvrg_shardmap.py).
+
+Single-device mesh in-process; an 8-device feature-sharded run executes in
+a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the
+main test process must keep seeing exactly 1 device).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses
+from repro.core.fdsvrg import SVRGConfig, run_serial_svrg
+from repro.core.fdsvrg_shardmap import (
+    FDSVRGShardedConfig,
+    input_shardings,
+    make_outer_iteration,
+)
+from repro.data.synthetic import make_sparse_classification
+
+
+def _reference_run(data, eta, inner, outers, u, lam, seed):
+    cfg = SVRGConfig(eta=eta, inner_steps=inner, outer_iters=outers,
+                     batch_size=u, seed=seed)
+    return run_serial_svrg(data, losses.logistic, losses.l2(lam), cfg)
+
+
+def test_shardmap_single_device_matches_serial():
+    data = make_sparse_classification(
+        dim=512, num_instances=64, nnz_per_instance=8, seed=0
+    )
+    eta, inner, outers, u, lam = 0.2, 16, 3, 2, 1e-3
+    mesh = jax.make_mesh((1,), ("model",))
+    cfg = FDSVRGShardedConfig(
+        dim=data.dim, num_instances=data.num_instances, nnz_max=data.nnz_max,
+        eta=eta, inner_steps=inner, batch_size=u, lam=lam,
+    )
+    step = make_outer_iteration(mesh, cfg, feature_axes=("model",))
+
+    rng = np.random.default_rng(7)
+    w = jnp.zeros((data.dim,), jnp.float32)
+    for t in range(outers):
+        samples = rng.integers(0, data.num_instances, size=(inner, u)).astype(np.int32)
+        w, gnorm = step(w, data.indices, data.values, data.labels,
+                        jnp.asarray(samples))
+    assert np.all(np.isfinite(np.asarray(w)))
+    assert float(gnorm) >= 0.0
+
+    # same sample stream through the serial reference
+    rng = np.random.default_rng(7)
+    w_ref = jnp.zeros((data.dim,), jnp.float32)
+    from repro.core.fdsvrg import _inner_epoch, full_gradient
+
+    for t in range(outers):
+        z, s0 = full_gradient(data, w_ref, losses.logistic)
+        samples = rng.integers(0, data.num_instances, size=(inner, u)).astype(np.int32)
+        w_ref = _inner_epoch(
+            data.indices, data.values, data.labels, w_ref, z, s0,
+            jnp.asarray(samples), eta, lam,
+            jnp.ones(inner, jnp.float32), "logistic", "l2", 1, None,
+        )
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref), rtol=2e-4, atol=1e-6)
+
+
+def test_shardmap_butterfly_mode_single_device():
+    data = make_sparse_classification(
+        dim=256, num_instances=32, nnz_per_instance=8, seed=1
+    )
+    mesh = jax.make_mesh((1,), ("model",))
+    cfg = FDSVRGShardedConfig(
+        dim=data.dim, num_instances=data.num_instances, nnz_max=data.nnz_max,
+        eta=0.1, inner_steps=8, batch_size=1, tree_mode="butterfly",
+    )
+    step = make_outer_iteration(mesh, cfg, feature_axes=("model",))
+    samples = np.zeros((8, 1), dtype=np.int32)
+    w, gnorm = step(
+        jnp.zeros((data.dim,), jnp.float32),
+        data.indices, data.values, data.labels, jnp.asarray(samples),
+    )
+    assert np.all(np.isfinite(np.asarray(w)))
+
+
+_SUBPROCESS_PROG = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np, jax.numpy as jnp
+    from repro.core import losses
+    from repro.core.fdsvrg import SVRGConfig, run_serial_svrg
+    from repro.core.fdsvrg_shardmap import FDSVRGShardedConfig, make_outer_iteration
+    from repro.data.synthetic import make_sparse_classification
+
+    assert jax.device_count() == 8
+    data = make_sparse_classification(dim=512, num_instances=48, nnz_per_instance=8, seed=0)
+    eta, inner, outers, u, lam = 0.2, 12, 2, 2, 1e-3
+    mesh = jax.make_mesh((8,), ("model",))
+    cfg = FDSVRGShardedConfig(dim=data.dim, num_instances=data.num_instances,
+                              nnz_max=data.nnz_max, eta=eta, inner_steps=inner,
+                              batch_size=u, lam=lam, tree_mode="{mode}")
+    step = make_outer_iteration(mesh, cfg, feature_axes=("model",))
+    rng = np.random.default_rng(3)
+    w = jnp.zeros((data.dim,), jnp.float32)
+    all_samples = []
+    for t in range(outers):
+        s = rng.integers(0, data.num_instances, size=(inner, u)).astype(np.int32)
+        all_samples.append(s)
+        w, gnorm = step(w, data.indices, data.values, data.labels, jnp.asarray(s))
+
+    # serial reference with the same sample stream
+    from repro.core.fdsvrg import _inner_epoch, full_gradient
+    w_ref = jnp.zeros((data.dim,), jnp.float32)
+    for t in range(outers):
+        z, s0 = full_gradient(data, w_ref, losses.logistic)
+        w_ref = _inner_epoch(data.indices, data.values, data.labels, w_ref, z, s0,
+                             jnp.asarray(all_samples[t]), eta, lam,
+                             jnp.ones(inner, jnp.float32), "logistic", "l2", 1, None)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref), rtol=3e-4, atol=3e-6)
+    print("OK-8DEV")
+    """
+)
+
+
+@pytest.mark.parametrize("mode", ["psum", "butterfly"])
+def test_shardmap_eight_devices_subprocess(mode):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_PROG.replace("{mode}", mode)],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK-8DEV" in proc.stdout

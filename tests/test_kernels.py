@@ -1,0 +1,191 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes (including non-tile-multiples, exercising the padding
+paths) and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype):
+    x = RNG.normal(0.0, 1.0, size=shape)
+    return jnp.asarray(x, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# fd_matvec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,n", [(512, 256), (1024, 512), (777, 130), (512, 1), (1, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fd_matvec_matches_ref(d, n, dtype):
+    w = _rand((d,), dtype)
+    data = _rand((d, n), dtype)
+    got = ops.margins_dense(w, data, interpret=True)
+    want = ref.fd_matvec_ref(w[:, None], data)[0]
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2  # f32 sums over d terms
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+    assert got.dtype == jnp.float32  # f32 accumulation regardless of input
+
+
+@pytest.mark.parametrize("block_k,block_n", [(128, 128), (256, 512), (512, 256)])
+def test_fd_matvec_block_shape_sweep(block_k, block_n):
+    w = _rand((1200,), jnp.float32)
+    data = _rand((1200, 300), jnp.float32)
+    got = ops.margins_dense(w, data, block_k=block_k, block_n=block_n, interpret=True)
+    want = ref.fd_matvec_ref(w[:, None], data)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# logistic_grad
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, 1000, 1024, 4097])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_logistic_grad_matches_ref(n, dtype):
+    s = _rand((n,), dtype) * 3
+    y = jnp.sign(_rand((n,), jnp.float32)) + (jnp.sign(_rand((n,), jnp.float32)) == 0)
+    loss, dloss = ops.loss_and_grad(s, y.astype(dtype), interpret=True)
+    loss_w, dloss_w = ref.logistic_grad_ref(s, y)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(loss_w), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(dloss), np.asarray(dloss_w), rtol=tol, atol=tol)
+
+
+def test_logistic_grad_extreme_margins_stable():
+    s = jnp.asarray([-1e4, -50.0, 0.0, 50.0, 1e4])
+    y = jnp.ones(5)
+    loss, dloss = ops.loss_and_grad(s, y, interpret=True)
+    assert np.all(np.isfinite(np.asarray(loss)))
+    assert np.all(np.isfinite(np.asarray(dloss)))
+    assert float(loss[4]) == pytest.approx(0.0, abs=1e-6)
+    assert float(dloss[0]) == pytest.approx(-1.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# svrg_update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [2048, 2049, 100, 65536])
+@pytest.mark.parametrize("eta,lam", [(0.1, 1e-4), (0.5, 0.0), (0.01, 1e-2)])
+def test_svrg_update_matches_ref(d, eta, lam):
+    w = _rand((d,), jnp.float32)
+    g = _rand((d,), jnp.float32)
+    z = _rand((d,), jnp.float32)
+    got = ops.svrg_dense_update(w, g, z, eta=eta, lam=lam, interpret=True)
+    want = ref.svrg_update_ref(w, g, z, eta=eta, lam=lam)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@given(
+    st.integers(min_value=1, max_value=300),
+    st.floats(min_value=1e-4, max_value=1.0),
+    st.floats(min_value=0.0, max_value=0.1),
+)
+@settings(max_examples=20, deadline=None)
+def test_svrg_update_property(d, eta, lam):
+    rng = np.random.default_rng(d)
+    w = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    got = ops.svrg_dense_update(w, g, z, eta=float(eta), lam=float(lam), interpret=True)
+    want = ref.svrg_update_ref(w, g, z, eta=float(eta), lam=float(lam))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "h,hkv,dh,s,length",
+    [
+        (8, 8, 64, 1024, 1024),   # MHA, full cache
+        (8, 2, 64, 1024, 700),    # GQA, partial cache
+        (16, 4, 128, 2048, 1),    # single valid position
+        (4, 1, 32, 300, 257),     # MQA, non-multiple S (padding path)
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_matches_ref(h, hkv, dh, s, length, dtype):
+    q = _rand((h, dh), dtype)
+    k = _rand((s, hkv, dh), dtype)
+    v = _rand((s, hkv, dh), dtype)
+    got = ops.decode_attention(q, k, v, length=length, interpret=True, block_s=256)
+    want = ref.flash_decode_ref(q, k, v, length=length)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_flash_decode_block_sweep():
+    q = _rand((8, 64), jnp.float32)
+    k = _rand((1024, 4, 64), jnp.float32)
+    v = _rand((1024, 4, 64), jnp.float32)
+    want = ref.flash_decode_ref(q, k, v, length=900)
+    for bs in (128, 256, 512, 1024):
+        got = ops.decode_attention(q, k, v, length=900, block_s=bs, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_matches_ref_long_cache():
+    """32k-token cache (the decode_32k shape, one batch element)."""
+    q = _rand((8, 64), jnp.bfloat16)
+    k = _rand((32768, 8, 64), jnp.bfloat16)
+    v = _rand((32768, 8, 64), jnp.bfloat16)
+    got = ops.decode_attention(q, k, v, length=31000, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, length=31000)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# kernels against the *algorithm* (integration): one SVRG step via kernels
+# equals one step of the reference implementation
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_composed_svrg_step_matches_core():
+    from repro.core import losses
+    from repro.data.synthetic import make_dense_classification
+
+    d, n = 640, 32
+    D, y = make_dense_classification(dim=d, num_instances=n, seed=0)
+    D = jnp.asarray(D)
+    y = jnp.asarray(y)
+    w = jnp.asarray(RNG.normal(size=d).astype(np.float32)) * 0.1
+    eta, lam = 0.2, 1e-3
+
+    # full-gradient phase via kernels
+    s0 = ops.margins_dense(w, D, interpret=True)
+    _, dl0 = ops.loss_and_grad(s0, y, interpret=True)
+    z = D @ (dl0 / n)
+
+    # one inner step on instance 3 via kernels
+    x3 = D[:, 3]
+    s_m = ops.margins_dense(w, D[:, 3:4], interpret=True)[0]
+    _, dl_m = ops.loss_and_grad(s_m[None], y[3:4], interpret=True)
+    g_sparse = (dl_m[0] - dl0[3]) * x3
+    w_next = ops.svrg_dense_update(w, g_sparse, z, eta=eta, lam=lam, interpret=True)
+
+    # reference: plain jnp
+    s0_ref = D.T @ w
+    dl0_ref = losses.logistic.dvalue(s0_ref, y)
+    z_ref = D @ (dl0_ref / n)
+    s_m_ref = x3 @ w
+    coef = losses.logistic.dvalue(s_m_ref, y[3]) - dl0_ref[3]
+    w_next_ref = w - eta * (coef * x3 + z_ref + lam * w)
+
+    np.testing.assert_allclose(
+        np.asarray(w_next), np.asarray(w_next_ref), rtol=2e-5, atol=2e-5
+    )

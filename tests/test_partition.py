@@ -1,0 +1,81 @@
+"""Property tests for the feature partitioner (paper §4.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import balanced, by_nnz, feature_counts
+
+
+@given(
+    st.integers(min_value=1, max_value=5000),
+    st.integers(min_value=1, max_value=64),
+)
+@settings(max_examples=80, deadline=None)
+def test_balanced_partition_invariants(dim, q):
+    if q > dim:
+        q = dim
+    part = balanced(dim, q)
+    sizes = part.block_sizes()
+    # covers [0, dim) exactly, contiguously
+    assert part.bounds[0] == 0 and part.bounds[-1] == dim
+    assert all(b > a for a, b in zip(part.bounds, part.bounds[1:]))
+    assert sum(sizes) == dim
+    # balanced to within one feature (paper: d_l = d/q)
+    assert max(sizes) - min(sizes) <= 1
+
+
+@given(
+    st.integers(min_value=8, max_value=2000),
+    st.integers(min_value=2, max_value=16),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=50, deadline=None)
+def test_by_nnz_partition_invariants(dim, q, seed):
+    if q > dim:
+        q = dim
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 100, size=dim)
+    part = by_nnz(dim, q, counts)
+    assert part.bounds[0] == 0 and part.bounds[-1] == dim
+    assert all(b > a for a, b in zip(part.bounds, part.bounds[1:]))
+    assert part.num_blocks == q
+
+
+def test_by_nnz_balances_skewed_mass():
+    dim, q = 1000, 4
+    counts = np.zeros(dim, dtype=np.int64)
+    counts[:10] = 10_000  # ten hot features carry almost all mass
+    part = by_nnz(dim, q, counts)
+    masses = [
+        counts[part.bounds[i]:part.bounds[i + 1]].sum() for i in range(q)
+    ]
+    # hot features spread across blocks far better than `balanced` would
+    bal = balanced(dim, q)
+    masses_bal = [
+        counts[bal.bounds[i]:bal.bounds[i + 1]].sum() for i in range(q)
+    ]
+    assert max(masses) < max(masses_bal)
+
+
+def test_owner_of():
+    part = balanced(100, 7)
+    for f in [0, 13, 50, 99]:
+        l = part.owner_of(f)
+        lo, hi = part.block(l)
+        assert lo <= f < hi
+
+
+def test_feature_counts():
+    indices = np.array([[0, 1, 1], [2, 0, 0]])
+    values = np.array([[1.0, 2.0, 0.0], [3.0, 0.0, 4.0]])
+    counts = feature_counts(indices, values, 4)
+    # (0,0)=1.0 and (1,2)=4.0 both hit feature 0; padding zeros don't count
+    assert counts.tolist() == [2, 1, 1, 0]
+
+
+def test_invalid_q_raises():
+    with pytest.raises(ValueError):
+        balanced(4, 0)
+    with pytest.raises(ValueError):
+        balanced(4, 5)

@@ -1,0 +1,74 @@
+"""Data pipeline and dry-run input-spec contracts."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, reduced_config
+from repro.data.pipeline import PipelineConfig, batches
+from repro.launch.inputs import (
+    decode_token_specs,
+    prefill_batch_specs,
+    train_batch_specs,
+)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "musicgen-large", "paligemma-3b"])
+def test_pipeline_matches_input_specs(arch):
+    """The pipeline must emit exactly the batch dict input_specs promises."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES["train_4k"]
+    specs = train_batch_specs(cfg, shape, grad_accum=1)
+    pcfg = PipelineConfig(shape.global_batch, shape.seq_len)
+    # generating a full 256x4096 batch is fine on CPU (ints)
+    batch = next(batches(cfg, pcfg))
+    assert set(batch) == set(specs)
+    for k in specs:
+        assert batch[k].shape == specs[k].shape, k
+        assert jnp.asarray(batch[k]).dtype == specs[k].dtype, k
+
+
+def test_pipeline_tokens_in_range_and_learnable():
+    cfg = reduced_config(get_config("smollm-360m"))
+    batch = next(batches(cfg, PipelineConfig(2, 256, seed=1)))
+    toks = batch["tokens"]
+    assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+    # copy motifs present: position 64..72 repeats 56..64
+    np.testing.assert_array_equal(toks[0, 64:72], toks[0, 56:64])
+
+
+def test_grad_accum_reshape():
+    cfg = reduced_config(get_config("smollm-360m"))
+    batch = next(batches(cfg, PipelineConfig(8, 16, grad_accum=4)))
+    assert batch["tokens"].shape == (4, 2, 16)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k", "decode_32k"])
+def test_input_specs_cover_every_combo(arch, shape_name):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        specs = train_batch_specs(cfg, shape, grad_accum=4)
+        assert all(v.shape[0] == 4 for v in specs.values())
+    elif shape.kind == "prefill":
+        specs = prefill_batch_specs(cfg, shape)
+        assert "tokens" in specs
+        if cfg.modality == "vision":
+            assert specs["patch_embeds"].shape == (
+                shape.global_batch, cfg.num_patches, cfg.frontend_dim
+            )
+    else:
+        tok = decode_token_specs(cfg, shape)
+        assert tok.shape[0] == shape.global_batch and tok.shape[1] == 1
+        if cfg.modality == "audio-codec":
+            assert tok.shape[2] == cfg.num_codebooks
+
+
+def test_vlm_train_spec_seq_budget():
+    """VLM text+patches must sum to the assigned seq_len."""
+    cfg = get_config("paligemma-3b")
+    shape = INPUT_SHAPES["train_4k"]
+    specs = train_batch_specs(cfg, shape, 1)
+    assert specs["tokens"].shape[1] + cfg.num_patches == shape.seq_len
+    assert specs["labels"].shape[1] == shape.seq_len

@@ -1,0 +1,184 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.comm import CommMeter, TpuV5eModel
+from repro.models.layers import apply_rope, rms_norm, softcap
+from repro.sharding.specs import RULES, ShardingCtx
+from repro.train.loop import cross_entropy
+
+
+# ---------------------------------------------------------------------------
+# CommMeter
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(1, 10**6), st.integers(1, 100)), min_size=1, max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_comm_meter_additivity(events):
+    m = CommMeter()
+    for scalars, rounds in events:
+        m.record("x", scalars, rounds)
+    assert m.total_scalars == sum(e[0] for e in events)
+    assert m.total_rounds == sum(e[1] for e in events)
+    assert m.by_kind["x"] == m.total_scalars
+
+
+@given(st.integers(2, 512), st.integers(1, 10**6))
+@settings(max_examples=40, deadline=None)
+def test_tree_reduce_cost_formula(q, payload):
+    m = CommMeter()
+    m.tree_reduce_broadcast(q, payload)
+    assert m.total_scalars == 2 * q * payload  # paper §4.5
+    assert m.total_rounds == 2 * int(np.ceil(np.log2(q)))
+
+
+# ---------------------------------------------------------------------------
+# Numerics helpers
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(1.0, 100.0), st.floats(-1e6, 1e6))
+@settings(max_examples=50, deadline=None)
+def test_softcap_bounded_and_monotone_through_zero(cap, x):
+    y = float(softcap(jnp.asarray(x, jnp.float32), cap))
+    assert abs(y) <= cap + 1e-3
+    assert y * x >= 0.0  # sign preserved (both may be ±0)
+
+
+def test_rms_norm_scale_invariance():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8, 16)), jnp.float32)
+    s = jnp.zeros((16,), jnp.float32)
+    y1 = rms_norm(x, s)
+    y2 = rms_norm(x * 7.3, s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 6, 2, 8)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(6), (1, 6))
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-4, atol=1e-5,
+    )
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 8)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.full((1, 1), m), 10_000.0)
+        kn = apply_rope(k, jnp.full((1, 1), n), 10_000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)
+    assert dot_at(2, 2) == pytest.approx(dot_at(9, 9), rel=1e-4)
+
+
+@given(st.integers(2, 6), st.integers(2, 10), st.integers(3, 50))
+@settings(max_examples=20, deadline=None)
+def test_cross_entropy_uniform_logits(b, s, v):
+    logits = jnp.zeros((b, s, v), jnp.float32)
+    labels = jnp.zeros((b, s), jnp.int32)
+    mask = jnp.ones((b, s))
+    ce = float(cross_entropy(logits, labels, mask, v))
+    assert ce == pytest.approx(np.log(v), rel=1e-5)
+
+
+def test_cross_entropy_masks_positions():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(1, 4, 8)), jnp.float32)
+    labels = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    full = float(cross_entropy(logits, labels, jnp.ones((1, 4)), 8))
+    # masking position 0 == CE over the remaining three
+    part = float(cross_entropy(logits, labels, jnp.asarray([[0.0, 1, 1, 1]]), 8))
+    manual = float(cross_entropy(logits[:, 1:], labels[:, 1:], jnp.ones((1, 3)), 8))
+    assert part == pytest.approx(manual, rel=1e-6)
+    assert part != pytest.approx(full, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs
+# ---------------------------------------------------------------------------
+
+
+def test_ctx_without_mesh_is_identity():
+    ctx = ShardingCtx(mesh=None)
+    x = jnp.ones((4, 4))
+    assert ctx.constrain(x, "batch", "embed") is x
+    assert ctx.spec("batch", "embed") == jax.sharding.PartitionSpec()
+
+
+def test_spec_div_drops_indivisible_axes():
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    # fake a 16-wide axis via rules resolution against a real mesh is hard
+    # on 1 device; test the arithmetic directly instead
+    ctx = ShardingCtx(mesh=mesh)
+    spec = ctx.spec_div((15, 64), "heads", None)
+    # model axis size 1 divides everything -> keeps the mapping
+    assert spec == jax.sharding.PartitionSpec("model", None)
+
+
+def test_rules_cover_all_logical_axes_used_by_models():
+    used = {
+        "batch", "seq", "seq_kv", "embed", "heads", "kv_heads", "mlp",
+        "experts", "expert_mlp", "vocab", "ssm_heads", "zero1",
+    }
+    assert used <= set(RULES)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_tpu_model_dominant_is_max(seed):
+    rng = np.random.default_rng(seed)
+    f, b, c = rng.uniform(1, 1e18, 3)
+    terms = TpuV5eModel().roofline_terms(
+        flops=f, hbm_bytes=b, collective_bytes=c, chips=256
+    )
+    vals = {k: terms[f"{k}_s"] for k in ("compute", "memory", "collective")}
+    assert terms["dominant"] == max(vals, key=vals.get)
+
+
+# ---------------------------------------------------------------------------
+# Benchmark cost model
+# ---------------------------------------------------------------------------
+
+
+def test_analytic_outer_paper_orderings():
+    from benchmarks.common import analytic_outer
+    from repro.data import datasets
+
+    for name in ("news20", "webspam", "kdd2010"):
+        spec = datasets.spec(name, scaled=False)
+        q = spec.default_workers
+        t_fd, c_fd = analytic_outer("fdsvrg", spec, q)
+        t_ds, c_ds = analytic_outer("dsvrg", spec, q)
+        t_ps, c_ps = analytic_outer("pslite_sgd", spec, q)
+        # paper §4.5 compares per-GRADIENT: FD does 2N gradients per outer
+        # (fullgrad + M=N inner), DSVRG does N(1+1/q)
+        per_grad_fd = c_fd / (2 * spec.num_instances)
+        per_grad_ds = c_ds / (spec.num_instances * (1 + 1 / q))
+        if spec.dim > spec.num_instances:
+            assert per_grad_fd < per_grad_ds, name
+        if spec.dim > 10 * spec.num_instances:  # d >> N: strict per-outer win
+            assert t_fd < t_ds, name
+            assert t_ps > t_fd, name  # PS-Lite slowest (paper Table 3)
+
+
+def test_analytic_scaling_near_ideal_at_small_q():
+    from benchmarks.common import analytic_outer
+    from repro.data import datasets
+
+    spec = datasets.spec("webspam", scaled=False)
+    t1, _ = analytic_outer("fdsvrg", spec, 1)
+    t4, _ = analytic_outer("fdsvrg", spec, 4)
+    t16, _ = analytic_outer("fdsvrg", spec, 16)
+    assert t1 / t4 > 3.0  # >75% efficiency at q=4 (paper Fig 9)
+    assert t1 / t16 > 8.0  # >50% efficiency at q=16

@@ -1,0 +1,97 @@
+"""Tree-reduce schedule and TPU-mapping tests (paper Figure 5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.comm import CommMeter
+from repro.core.tree_reduce import (
+    broadcast_schedule,
+    collective_permute_tree,
+    psum_tree,
+    simulate_tree_sum,
+    tree_schedule,
+)
+
+
+@given(st.integers(min_value=1, max_value=64))
+@settings(max_examples=40, deadline=None)
+def test_schedule_covers_all_workers(q):
+    """Every non-root worker sends exactly once; root receives everything."""
+    senders = [src for rnd in tree_schedule(q) for (src, dst) in rnd]
+    assert sorted(senders) == list(range(1, q))
+    # log depth
+    assert len(tree_schedule(q)) == (0 if q == 1 else int(np.ceil(np.log2(q))))
+
+
+@given(
+    st.integers(min_value=1, max_value=33),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_tree_sum_equals_sum(q, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=(q, 3)).astype(np.float32)
+    got = simulate_tree_sum([jnp.asarray(v) for v in vals])
+    np.testing.assert_allclose(
+        np.asarray(got), vals.astype(np.float64).sum(axis=0), rtol=1e-4, atol=1e-5
+    )
+
+
+@given(st.integers(min_value=2, max_value=64))
+@settings(max_examples=30, deadline=None)
+def test_meter_matches_paper_accounting(q):
+    """Paper §4.5: tree reduce+broadcast of one scalar costs 2q scalars."""
+    meter = CommMeter()
+    simulate_tree_sum([jnp.ones(()) for _ in range(q)], meter=meter, payload=1)
+    assert meter.total_scalars == 2 * q
+    assert meter.total_rounds == 2 * int(np.ceil(np.log2(q)))
+
+
+def test_broadcast_is_reverse_tree():
+    q = 8
+    fwd = tree_schedule(q)
+    bwd = broadcast_schedule(q)
+    assert len(fwd) == len(bwd)
+    flipped = [[(dst, src) for (src, dst) in rnd] for rnd in reversed(bwd)]
+    assert flipped == fwd
+
+
+def test_psum_tree_single_device():
+    mesh = jax.make_mesh((1,), ("model",))
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    f = shard_map(
+        lambda x: psum_tree(x, "model"),
+        mesh=mesh,
+        in_specs=P("model"),
+        out_specs=P("model"),
+    )
+    x = jnp.arange(4.0)
+    np.testing.assert_allclose(np.asarray(f(x)), np.asarray(x))
+
+
+def test_collective_permute_tree_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        # trace-time check: axis_size validation fires before any collective
+        collective_permute_tree(jnp.ones(()), "model", 3)
+
+
+def test_butterfly_matches_psum_in_vmapped_sim():
+    """Simulate the butterfly with explicit per-worker lanes (no devices):
+    run the same arithmetic the ppermute tree does and check it all-reduces."""
+    q = 8
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=(q,)).astype(np.float64)
+    lanes = vals.copy()
+    stride = 1
+    while stride < q:
+        permuted = np.empty_like(lanes)
+        for i in range(q):
+            permuted[i ^ stride] = lanes[i]
+        lanes = lanes + permuted
+        stride *= 2
+    np.testing.assert_allclose(lanes, np.full(q, vals.sum()), rtol=1e-12)
