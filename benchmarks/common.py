@@ -20,11 +20,11 @@ import time
 import numpy as np
 
 from repro.core import losses
-from repro.core.comm import ClusterModel
 from repro.core.fdsvrg import RunResult, SVRGConfig, run_fdsvrg, run_serial_svrg
 from repro.core.partition import balanced
 from repro.core import baselines
 from repro.data import datasets
+from repro.dist import ClusterModel, CommReport
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
 
@@ -169,6 +169,13 @@ def run_method(
                          outer_iters=outer_iters, seed=seed)
         return baselines.run_pslite_sgd(data, q, LOSS, reg, cfg, CLUSTER)
     raise ValueError(method)
+
+
+def comm_report(method: str, result: RunResult, q: int) -> CommReport:
+    """Bytes-on-the-wire summary of a measured run.  Every method's backend
+    meters with the same machinery and closed forms (one meter per run),
+    so reports are directly comparable across methods."""
+    return CommReport.from_result(method, q, result, cluster=CLUSTER)
 
 
 def time_to_gap(result: RunResult, target_obj: float, schedule, tol: float = 1e-4):

@@ -3,14 +3,28 @@
     PYTHONPATH=src python -m benchmarks.run [--quick]
 
 Prints ``name,us_per_call,derived`` CSV lines per the harness contract;
-full tables land in results/benchmarks/*.csv.
+full tables land in results/benchmarks/*.csv, and per-suite JSON reports
+(including the per-method ``repro.dist`` communication reports) land in
+results/benchmarks/BENCH_<name>.json — schema in docs/benchmarks.md.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+
+def write_bench_json(name: str, payload: dict) -> str:
+    """Serialize one suite's report as results/benchmarks/BENCH_<name>.json."""
+    from benchmarks.common import ensure_dir
+
+    path = os.path.join(ensure_dir(), f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
 
 
 def main() -> None:
@@ -26,6 +40,7 @@ def main() -> None:
         scalability,
         speedup,
     )
+    from repro.dist.metering import reports_to_json
 
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
@@ -33,38 +48,61 @@ def main() -> None:
     def stamp(name, t_start, derived):
         us = (time.perf_counter() - t_start) * 1e6
         print(f"{name},{us:.0f},{derived}", flush=True)
+        return us
 
     t = time.perf_counter()
     _, rows = convergence.run(quick=args.quick)
-    stamp("fig6_fig7_convergence", t, f"{len(rows)} rows")
+    us = stamp("fig6_fig7_convergence", t, f"{len(rows)} rows")
+    write_bench_json("convergence", {"wall_us": us, "rows": len(rows)})
 
     t = time.perf_counter()
-    _, rows, summary = speedup.run(quick=args.quick)
+    _, rows, summary, reports = speedup.run(quick=args.quick)
     fd_vs_ds = [r for r in rows if r[1] == "speedup_vs_dsvrg"]
-    stamp("tab2_speedup_vs_dsvrg", t,
-          ";".join(f"{r[0]}={r[3]}" for r in fd_vs_ds))
+    us = stamp("tab2_speedup_vs_dsvrg", t,
+               ";".join(f"{r[0]}={r[3]}" for r in fd_vs_ds))
     fd_vs_ps = [r for r in rows if r[1] == "speedup_vs_pslite_sgd"]
     print(f"tab3_speedup_vs_pslite,0," + ";".join(f"{r[0]}={r[3]}" for r in fd_vs_ps))
+    write_bench_json("speedup", {
+        "wall_us": us,
+        "modeled_time_to_gap_s": {
+            name: {m: t_gap for m, t_gap in times.items()}
+            for name, times in summary.items()
+        },
+        "comm": reports_to_json(reports),
+    })
 
     t = time.perf_counter()
     _, rows = lambda_sensitivity.run()
-    stamp("fig8_lambda_sensitivity", t, f"{len(rows)} rows")
+    us = stamp("fig8_lambda_sensitivity", t, f"{len(rows)} rows")
+    write_bench_json("lambda_sensitivity", {"wall_us": us, "rows": len(rows)})
 
     t = time.perf_counter()
-    _, rows, times = scalability.run()
-    stamp("fig9_scalability", t,
-          ";".join(f"q{q}={times[1]/times[q]:.2f}x" for q in (1, 4, 8, 16)))
+    _, rows, times, measured = scalability.run()
+    us = stamp("fig9_scalability", t,
+               ";".join(f"q{q}={times[1]/times[q]:.2f}x" for q in (1, 4, 8, 16)))
+    write_bench_json("scalability", {
+        "wall_us": us,
+        "modeled_time_s": {str(q): times[q] for q in times},
+        "speedup": {str(q): times[1] / times[q] for q in times},
+        "comm": reports_to_json({"webspam/fdsvrg": measured}),
+    })
 
     t = time.perf_counter()
     _, rows = kernels_bench.run()
     for r in rows:
         print(",".join(map(str, r)))
-    stamp("kernels_micro_total", t, f"{len(rows)} kernels")
+    us = stamp("kernels_micro_total", t, f"{len(rows)} kernels")
+    write_bench_json("kernels", {
+        "wall_us": us,
+        "kernels": {str(r[0]): {"us_per_call": r[1], "derived": r[2]}
+                    for r in rows if len(r) >= 3},
+    })
 
     t = time.perf_counter()
     _, rows = roofline.run()
     ok = sum(1 for r in rows if r and r[3] != "FAIL")
-    stamp("roofline_table", t, f"{ok}/{len(rows)} dryrun combos OK")
+    us = stamp("roofline_table", t, f"{ok}/{len(rows)} dryrun combos OK")
+    write_bench_json("roofline", {"wall_us": us, "ok": ok, "total": len(rows)})
 
     print(f"total_benchmark_wall,{(time.perf_counter()-t0)*1e6:.0f},seconds="
           f"{time.perf_counter()-t0:.1f}")

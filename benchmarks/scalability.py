@@ -5,7 +5,7 @@ work (same outer iterations / gradient budget)."""
 
 from __future__ import annotations
 
-from benchmarks.common import analytic_outer, run_method, write_csv
+from benchmarks.common import analytic_outer, comm_report, run_method, write_csv
 from repro.data import datasets
 
 
@@ -18,6 +18,7 @@ def run(outer_iters: int = 4):
     # one scaled run proves convergence; per-q time is the analytic model
     res = run_method("fdsvrg", data, 16, 1e-4, outer_iters=outer_iters)
     assert res.history[-1].objective < res.history[0].objective
+    measured = comm_report("fdsvrg", res, 16)
 
     rows = []
     times = {}
@@ -31,14 +32,15 @@ def run(outer_iters: int = 4):
         ["workers", "modeled_time_s", "speedup", "ideal"],
         rows,
     )
-    return path, rows, times
+    return path, rows, times, measured
 
 
 def main():
-    path, rows, times = run()
+    path, rows, times, measured = run()
     print(f"scalability: wrote {len(rows)} rows to {path}")
     for q in (1, 4, 8, 16):
         print(f"  q={q}: time={times[q]:.5f}s speedup={times[1]/times[q]:.2f}x")
+    print(f"  measured (scaled, q=16): {measured.bytes_on_wire:,} bytes on the wire")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,17 @@
 """Tables 2 & 3: modeled time to reach a 1e-4 objective gap; speedups of
-FD-SVRG over DSVRG and over PS-Lite (SGD)."""
+FD-SVRG over DSVRG and over PS-Lite (SGD).
+
+Every method runs through the ``repro.dist`` substrate, so the
+``measured_*`` columns are bytes-on-the-wire read from each run's meter —
+same metering machinery and closed forms for every method, hence
+apples-to-apples by construction."""
 
 from __future__ import annotations
 
 from benchmarks.common import (
     analytic_schedule,
     best_objective,
+    comm_report,
     run_method,
     time_to_gap,
     write_csv,
@@ -19,6 +25,7 @@ def run(lam: float = 1e-4, outer_iters: int = 8, quick: bool = False):
     names = ["news20", "webspam"] if quick else ["news20", "url", "webspam", "kdd2010"]
     rows = []
     summary = {}
+    reports = {}
     for name in names:
         spec_full = datasets.spec(name, scaled=False)
         data = datasets.load(name)
@@ -31,6 +38,8 @@ def run(lam: float = 1e-4, outer_iters: int = 8, quick: bool = False):
         times = {}
         last_time = {}
         for m, r in res.items():
+            rep = comm_report(m, r, q)
+            reports[f"{name}/{m}"] = rep
             sched = analytic_schedule(m, spec_full, q, outer_iters)
             t, comm, outer = time_to_gap(r, star, sched, TOL)
             times[m] = t
@@ -40,6 +49,8 @@ def run(lam: float = 1e-4, outer_iters: int = 8, quick: bool = False):
                 f"{t:.6f}" if t is not None else f">{sched[-1][0]:.4f}",
                 comm if comm is not None else f">{sched[-1][1]}",
                 outer if outer is not None else "n/a",
+                rep.scalars,
+                rep.bytes_on_wire,
             ])
         summary[name] = times
         # speedups (paper Table 2/3 layout)
@@ -49,24 +60,28 @@ def run(lam: float = 1e-4, outer_iters: int = 8, quick: bool = False):
             if fd:
                 if tb is not None:
                     sp = tb / fd
-                    rows.append([name, f"speedup_vs_{base}", q, f"{sp:.2f}", "", ""])
+                    rows.append([name, f"speedup_vs_{base}", q, f"{sp:.2f}", "", "", "", ""])
                 else:
                     lower = last_time[base] / fd
-                    rows.append([name, f"speedup_vs_{base}", q, f">{lower:.1f}", "", ""])
+                    rows.append([name, f"speedup_vs_{base}", q, f">{lower:.1f}", "", "", "", ""])
     path = write_csv(
         "tab2_tab3_speedup.csv",
         ["dataset", "method", "workers", "modeled_time_to_gap_s",
-         "comm_scalars_to_gap", "outer_iters_to_gap"],
+         "comm_scalars_to_gap", "outer_iters_to_gap",
+         "measured_comm_scalars", "measured_bytes_on_wire"],
         rows,
     )
-    return path, rows, summary
+    return path, rows, summary, reports
 
 
 def main():
-    path, rows, summary = run()
+    path, rows, summary, reports = run()
     print(f"speedup: wrote {len(rows)} rows to {path}")
     for name, times in summary.items():
         print(" ", name, {k: (round(v, 5) if v else None) for k, v in times.items()})
+    for key, rep in sorted(reports.items()):
+        print(f"  {key}: {rep.bytes_on_wire:,} bytes on the wire "
+              f"({rep.scalars:,} scalars, {rep.rounds:,} rounds)")
 
 
 if __name__ == "__main__":

@@ -6,10 +6,10 @@ to end, in ~20 lines of user code).
 
 from repro.configs.fdsvrg_linear import CONFIGS
 from repro.core import losses
-from repro.core.comm import ClusterModel
 from repro.core.fdsvrg import SVRGConfig, objective, run_fdsvrg, run_serial_svrg
 from repro.core.partition import balanced
 from repro.data import datasets
+from repro.dist import ClusterModel, SimBackend
 
 
 def main():
@@ -25,7 +25,8 @@ def main():
                      outer_iters=8, batch_size=8)
 
     part = balanced(data.dim, lc.workers)
-    fd = run_fdsvrg(data, part, loss, reg, cfg, ClusterModel(flops_per_s=2e8))
+    backend = SimBackend(lc.workers, ClusterModel(flops_per_s=2e8))
+    fd = run_fdsvrg(data, part, loss, reg, cfg, backend=backend)
     serial = run_serial_svrg(data, loss, reg, cfg)
 
     print(f"\n{'outer':>5} {'FD-SVRG obj':>12} {'serial obj':>12} "
@@ -35,9 +36,10 @@ def main():
               f"{h_fd.comm_scalars:>14,}")
     drift = abs(fd.final_objective() - serial.final_objective())
     print(f"\nFD-SVRG == serial SVRG (paper §4.3): |Δobj| = {drift:.2e}")
-    print(f"total communication: {fd.meter.total_scalars:,} scalars "
-          f"across {lc.workers} workers "
-          f"(DSVRG would need ~{2*lc.workers*data.dim:,} per outer iteration)")
+    rep = backend.report("fdsvrg")
+    print(f"total communication: {rep.scalars:,} scalars "
+          f"({rep.bytes_on_wire:,} bytes) across {rep.q} workers "
+          f"(DSVRG would need ~{2*lc.workers*data.dim:,} scalars per outer iteration)")
 
 
 if __name__ == "__main__":

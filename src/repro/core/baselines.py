@@ -13,18 +13,18 @@
 * :func:`run_pslite_sgd` — PS-Lite (SGD): asynchronous SGD, no variance
   reduction (the paper's Table 3 baseline).
 
-All baselines share the exact loss/regularizer code with FD-SVRG, meter
-every message (scalars + rounds) and accumulate modeled wall-clock from
-the same :class:`ClusterModel`, so Figures 6/7 and Tables 2/3 compare
-like-for-like.  Sparse pushes are metered as 2·nnz scalars (key+value
-pairs — the PS-Lite <key,value> optimization the paper grants the
-baselines); dense pulls as d scalars.
+All baselines share the exact loss/regularizer code with FD-SVRG and run
+on the same :class:`repro.dist.Collectives` substrate: every message is
+metered (scalars + rounds) and modeled wall-clock is accumulated through
+the backend's shared :class:`~repro.dist.meter.ClusterModel`, so Figures
+6/7 and Tables 2/3 compare like-for-like.  Sparse pushes are metered as
+2·nnz scalars (key+value pairs — the PS-Lite <key,value> optimization the
+paper grants the baselines); dense pulls as d scalars.
 """
 
 from __future__ import annotations
 
 import functools
-import math
 import time
 
 import jax
@@ -32,7 +32,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import losses as losses_lib
-from repro.core.comm import ClusterModel, CommMeter
 from repro.core.fdsvrg import (
     OuterRecord,
     RunResult,
@@ -44,6 +43,7 @@ from repro.core.fdsvrg import (
     objective,
 )
 from repro.data.sparse import PaddedCSR, scatter_grad
+from repro.dist import ClusterModel, Collectives, SimBackend
 
 
 def instance_shards(n: int, q: int) -> list[tuple[int, int]]:
@@ -68,25 +68,24 @@ def run_dsvrg(
     reg: losses_lib.Regularizer,
     cfg: SVRGConfig,
     cluster: ClusterModel | None = None,
+    backend: Collectives | None = None,
 ) -> RunResult:
-    cluster = cluster or ClusterModel()
+    backend = backend or SimBackend(q, cluster)
     rng = np.random.default_rng(cfg.seed)
     n, d, nnz = data.num_instances, data.dim, data.nnz_max
     shards = instance_shards(n, q)
     w = jnp.zeros((d,), dtype=data.values.dtype)
-    meter = CommMeter()
     history: list[OuterRecord] = []
-    modeled = 0.0
     m_local = cfg.inner_steps  # paper: M = local instance count = N/q
     t_start = time.perf_counter()
 
     for t in range(cfg.outer_iters):
         z_data, s0 = full_gradient(data, w, loss)
         # center -> q machines: w (d each); machines -> center: grad (d each)
-        meter.record("dsvrg_fullgrad", 2 * q * d, rounds=2)
-        modeled += cluster.time(
-            critical_flops=4.0 * (n / q) * nnz,
-            critical_scalars=2 * q * d,
+        backend.p2p(2 * q * d, "dsvrg_fullgrad", rounds=2)
+        backend.charge(
+            flops=4.0 * (n / q) * nnz,
+            scalars=2 * q * d,
             rounds=2,
         )
 
@@ -103,20 +102,21 @@ def run_dsvrg(
             loss.name, reg.name, 1, None,
         )
         # center -> J: full gradient (d); J -> center: parameter (d)
-        meter.record("dsvrg_handoff", 2 * d, rounds=2)
-        modeled += cluster.time(
-            critical_flops=2.0 * m_local * (cfg.batch_size * nnz + d),
-            critical_scalars=2 * d,
+        backend.p2p(2 * d, "dsvrg_handoff", rounds=2)
+        backend.charge(
+            flops=2.0 * m_local * (cfg.batch_size * nnz + d),
+            scalars=2 * d,
             rounds=2,
         )
 
         obj = objective(data, w, loss, reg)
         gnorm = float(jnp.linalg.norm(z_data + reg.grad(w)))
         history.append(
-            OuterRecord(t, obj, gnorm, meter.total_scalars, meter.total_rounds,
-                        modeled, time.perf_counter() - t_start)
+            OuterRecord(t, obj, gnorm, backend.meter.total_scalars,
+                        backend.meter.total_rounds, backend.modeled_time_s,
+                        time.perf_counter() - t_start)
         )
-    return RunResult(w=w, history=history, meter=meter)
+    return RunResult(w=w, history=history, meter=backend.meter)
 
 
 # ---------------------------------------------------------------------------
@@ -131,22 +131,21 @@ def run_syn_svrg(
     reg: losses_lib.Regularizer,
     cfg: SVRGConfig,
     cluster: ClusterModel | None = None,
+    backend: Collectives | None = None,
 ) -> RunResult:
-    cluster = cluster or ClusterModel()
+    backend = backend or SimBackend(q, cluster)
     rng = np.random.default_rng(cfg.seed)
     n, d, nnz = data.num_instances, data.dim, data.nnz_max
     w = jnp.zeros((d,), dtype=data.values.dtype)
-    meter = CommMeter()
     history: list[OuterRecord] = []
-    modeled = 0.0
     t_start = time.perf_counter()
 
     for t in range(cfg.outer_iters):
         z_data, s0 = full_gradient(data, w, loss)
-        meter.record("ps_fullgrad", 2 * q * d, rounds=2)
-        modeled += cluster.time(
-            critical_flops=4.0 * (n / q) * nnz,
-            critical_scalars=2 * q * d,
+        backend.p2p(2 * q * d, "ps_fullgrad", rounds=2)
+        backend.charge(
+            flops=4.0 * (n / q) * nnz,
+            scalars=2 * q * d,
             rounds=2,
         )
 
@@ -162,21 +161,25 @@ def run_syn_svrg(
         # per step: q workers pull dense w (q*d), push sparse VR grads
         # (2*nnz keys+values each) -- the <key,value> concession.
         per_step = q * d + q * 2 * cfg.batch_size * nnz
-        meter.record("ps_inner", per_step * cfg.inner_steps,
-                     rounds=2 * cfg.inner_steps)
-        modeled += cfg.inner_steps * cluster.time(
-            critical_flops=2.0 * nnz * cfg.batch_size + 2.0 * d,
-            critical_scalars=per_step,
-            rounds=2,
+        backend.p2p(per_step * cfg.inner_steps, "ps_inner",
+                    rounds=2 * cfg.inner_steps)
+        backend.charge_seconds(
+            cfg.inner_steps
+            * backend.cluster.time(
+                critical_flops=2.0 * nnz * cfg.batch_size + 2.0 * d,
+                critical_scalars=per_step,
+                rounds=2,
+            )
         )
 
         obj = objective(data, w, loss, reg)
         gnorm = float(jnp.linalg.norm(z_data + reg.grad(w)))
         history.append(
-            OuterRecord(t, obj, gnorm, meter.total_scalars, meter.total_rounds,
-                        modeled, time.perf_counter() - t_start)
+            OuterRecord(t, obj, gnorm, backend.meter.total_scalars,
+                        backend.meter.total_rounds, backend.modeled_time_s,
+                        time.perf_counter() - t_start)
         )
-    return RunResult(w=w, history=history, meter=meter)
+    return RunResult(w=w, history=history, meter=backend.meter)
 
 
 # ---------------------------------------------------------------------------
@@ -239,26 +242,25 @@ def _run_async(
     loss: losses_lib.MarginLoss,
     reg: losses_lib.Regularizer,
     cfg: SVRGConfig,
-    cluster: ClusterModel,
+    backend: Collectives,
     variance_reduced: bool,
     kind: str,
 ) -> RunResult:
     rng = np.random.default_rng(cfg.seed)
+    cluster = backend.cluster
     n, d, nnz = data.num_instances, data.dim, data.nnz_max
     w = jnp.zeros((d,), dtype=data.values.dtype)
-    meter = CommMeter()
     history: list[OuterRecord] = []
-    modeled = 0.0
     delay_buf = max(2, q)
     t_start = time.perf_counter()
 
     for t in range(cfg.outer_iters):
         if variance_reduced:
             z_data, s0 = full_gradient(data, w, loss)
-            meter.record(f"{kind}_fullgrad", 2 * q * d, rounds=2)
-            modeled += cluster.time(
-                critical_flops=4.0 * (n / q) * nnz,
-                critical_scalars=2 * q * d,
+            backend.p2p(2 * q * d, f"{kind}_fullgrad", rounds=2)
+            backend.charge(
+                flops=4.0 * (n / q) * nnz,
+                scalars=2 * q * d,
                 rounds=2,
             )
         else:
@@ -277,30 +279,33 @@ def _run_async(
         # (VR-)gradient (2*nnz) -- but the reg term makes pushes dense in
         # practice; we still grant sparsity to the baseline.
         per_step = d + 2 * nnz
-        meter.record(f"{kind}_inner", per_step * cfg.inner_steps,
-                     rounds=2 * cfg.inner_steps)
+        backend.p2p(per_step * cfg.inner_steps, f"{kind}_inner",
+                    rounds=2 * cfg.inner_steps)
         # Async: q workers overlap compute; the server serializes message
         # handling, so throughput is bounded by the server's bandwidth.
-        modeled += cfg.inner_steps * max(
-            (2.0 * nnz + 2.0 * d) / cluster.flops_per_s / q,
-            per_step * cluster.bytes_per_scalar / cluster.bandwidth_Bps,
+        backend.charge_seconds(
+            cfg.inner_steps * max(
+                (2.0 * nnz + 2.0 * d) / cluster.flops_per_s / q,
+                per_step * cluster.bytes_per_scalar / cluster.bandwidth_Bps,
+            )
         )
 
         obj = objective(data, w, loss, reg)
         gd, _ = full_gradient(data, w, loss)
         gnorm = float(jnp.linalg.norm(gd + reg.grad(w)))
         history.append(
-            OuterRecord(t, obj, gnorm, meter.total_scalars, meter.total_rounds,
-                        modeled, time.perf_counter() - t_start)
+            OuterRecord(t, obj, gnorm, backend.meter.total_scalars,
+                        backend.meter.total_rounds, backend.modeled_time_s,
+                        time.perf_counter() - t_start)
         )
-    return RunResult(w=w, history=history, meter=meter)
+    return RunResult(w=w, history=history, meter=backend.meter)
 
 
-def run_asy_svrg(data, q, loss, reg, cfg, cluster=None) -> RunResult:
-    return _run_async(data, q, loss, reg, cfg, cluster or ClusterModel(),
+def run_asy_svrg(data, q, loss, reg, cfg, cluster=None, backend=None) -> RunResult:
+    return _run_async(data, q, loss, reg, cfg, backend or SimBackend(q, cluster),
                       variance_reduced=True, kind="asysvrg")
 
 
-def run_pslite_sgd(data, q, loss, reg, cfg, cluster=None) -> RunResult:
-    return _run_async(data, q, loss, reg, cfg, cluster or ClusterModel(),
+def run_pslite_sgd(data, q, loss, reg, cfg, cluster=None, backend=None) -> RunResult:
+    return _run_async(data, q, loss, reg, cfg, backend or SimBackend(q, cluster),
                       variance_reduced=False, kind="pslite")

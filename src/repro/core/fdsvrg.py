@@ -14,15 +14,17 @@ Three implementations, one update rule:
   simulation (each worker only ever touches its own ``w^(l)`` and
   ``D^(l)``); slow, used by tests to certify exact equivalence.
 
-The deployable TPU version (shard_map over the ``model`` mesh axis) lives
-in :mod:`repro.core.fdsvrg_shardmap`.
+All communication — executed or modeled — goes through a
+:class:`repro.dist.Collectives` backend, so FD-SVRG and the baselines in
+:mod:`repro.core.baselines` report bytes and modeled wall-clock through
+the same meter.  The deployable TPU version (shard_map over the ``model``
+mesh axis) lives in :mod:`repro.core.fdsvrg_shardmap`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 import time
 from typing import Any
 
@@ -31,9 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import losses as losses_lib
-from repro.core.comm import ClusterModel, CommMeter
 from repro.core.partition import FeaturePartition
-from repro.core.tree_reduce import simulate_tree_sum
+from repro.dist import ClusterModel, Collectives, CommMeter, SimBackend, tree_order_sum
 from repro.data.sparse import (
     PaddedCSR,
     margins,
@@ -166,16 +167,9 @@ def _inner_epoch(
             lo, hi = bounds[l], bounds[l + 1]
             block = jax.lax.slice_in_dim(w, lo, hi)
             parts.append(margins_block(idx, val, block, lo))
-        # Tree-order summation (pairwise), mirroring Figure 5 exactly.
-        acc = list(parts)
-        stride = 1
-        while stride < num_blocks:
-            k = 0
-            while k + stride < num_blocks:
-                acc[k] = acc[k] + acc[k + stride]
-                k += 2 * stride
-            stride *= 2
-        return acc[0]
+        # Pairwise summation mirroring Figure 5 exactly (shared with the
+        # simulation and interpret backends, so floating point matches).
+        return tree_order_sum(parts)
 
     def step(w, inp):
         ids, mask = inp  # ids: int32[u]
@@ -260,37 +254,43 @@ def run_fdsvrg(
     reg: losses_lib.Regularizer,
     cfg: SVRGConfig,
     cluster: ClusterModel | None = None,
+    backend: Collectives | None = None,
 ) -> RunResult:
     """Algorithm 1 with q = partition.num_blocks feature-sharded workers.
 
     Numerics: identical update sequence to serial SVRG (Theorem: the
     decomposition w^T x = sum_l w^(l)T x^(l) is exact; summation follows
-    the tree order).  Communication/time: the paper's accounting —
+    the tree order).  Communication/time: the paper's accounting, metered
+    through ``backend`` (default: a fresh ``SimBackend``) —
 
       outer t:  tree reduce+broadcast of the N-vector  w_t^T D  -> 2qN scalars
       inner m:  tree reduce+broadcast of u margins      -> 2qu scalars
     """
     q = partition.num_blocks
-    cluster = cluster or ClusterModel()
+    if backend is None:
+        backend = SimBackend(q, cluster)
+    elif backend.q != q:
+        raise ValueError(
+            f"backend has q={backend.q} workers but the partition has "
+            f"{q} blocks"
+        )
     rng = np.random.default_rng(cfg.seed)
     w = jnp.zeros((data.dim,), dtype=data.values.dtype)
-    meter = CommMeter()
     history: list[OuterRecord] = []
-    modeled_time = 0.0
     n = data.num_instances
     nnz = data.nnz_max
-    log_rounds = 2 * max(1, math.ceil(math.log2(q))) if q > 1 else 0
+    log_rounds = backend.tree_rounds
     t_start = time.perf_counter()
 
     for t in range(cfg.outer_iters):
         # --- full-gradient phase (Alg 1 lines 3-5) ---
         z_data, s0 = full_gradient(data, w, loss)
-        meter.tree_reduce_broadcast(q, payload=n)  # w_t^T D summed across blocks
+        backend.meter_tree(payload=n)  # w_t^T D summed across blocks
         # per-worker compute: margins over the local block (N*nnz/q flops-ish)
         # + local scatter of the full gradient.
-        modeled_time += cluster.time(
-            critical_flops=2.0 * n * nnz / q * 2,  # margins + scatter
-            critical_scalars=2 * q * n,
+        backend.charge(
+            flops=2.0 * n * nnz / q * 2,  # margins + scatter
+            scalars=2 * q * n,
             rounds=log_rounds,
         )
 
@@ -314,16 +314,16 @@ def run_fdsvrg(
         )
         # --- inner-loop communication (Alg 1 lines 9-11): one tree round
         # per mini-batch of u margins; M steps total (metered in aggregate).
-        meter.record(
-            "tree_reduce", 2 * q * cfg.batch_size * cfg.inner_steps,
-            rounds=log_rounds * cfg.inner_steps,
-        )
+        backend.meter_tree(payload=cfg.batch_size, steps=cfg.inner_steps)
         # Dense-update compute per worker: O(d/q) per step for the z + reg
         # part plus O(nnz) for the sparse part.
-        modeled_time += cfg.inner_steps * cluster.time(
-            critical_flops=2.0 * (data.dim / q + cfg.batch_size * nnz),
-            critical_scalars=2 * q * cfg.batch_size,
-            rounds=log_rounds,
+        backend.charge_seconds(
+            cfg.inner_steps
+            * backend.cluster.time(
+                critical_flops=2.0 * (data.dim / q + cfg.batch_size * nnz),
+                critical_scalars=2 * q * cfg.batch_size,
+                rounds=log_rounds,
+            )
         )
 
         obj = objective(data, w, loss, reg)
@@ -333,13 +333,13 @@ def run_fdsvrg(
                 t,
                 obj,
                 gnorm,
-                meter.total_scalars,
-                meter.total_rounds,
-                modeled_time,
+                backend.meter.total_scalars,
+                backend.meter.total_rounds,
+                backend.modeled_time_s,
                 time.perf_counter() - t_start,
             )
         )
-    return RunResult(w=w, history=history, meter=meter)
+    return RunResult(w=w, history=history, meter=backend.meter)
 
 
 # ---------------------------------------------------------------------------
@@ -353,16 +353,19 @@ def fdsvrg_worker_simulation(
     loss: losses_lib.MarginLoss,
     reg: losses_lib.Regularizer,
     cfg: SVRGConfig,
+    backend: Collectives | None = None,
 ) -> tuple[jax.Array, CommMeter]:
     """Object-level Algorithm 1: a list of per-worker states, every
-    cross-worker scalar passes through :func:`simulate_tree_sum`.
+    cross-worker scalar passes through ``backend.all_reduce`` (default: a
+    fresh ``SimBackend`` running the explicit Figure-5 schedule).
 
-    Returns the concatenated final parameter and the comm meter.
-    Deliberately unjitted and slow — this is the executable spec.
+    Returns the concatenated final parameter and the backend's comm meter.
+    Deliberately unjitted and slow — this is the executable spec, and the
+    vehicle for the backend-equivalence tests.
     """
     q = partition.num_blocks
+    backend = backend or SimBackend(q)
     rng = np.random.default_rng(cfg.seed)
-    meter = CommMeter()
     n = data.num_instances
 
     # Worker state: w^(l)
@@ -377,7 +380,7 @@ def fdsvrg_worker_simulation(
             margins_block(data.indices, data.values, blocks[l], partition.bounds[l])
             for l in range(q)
         ]
-        s0 = simulate_tree_sum(partials, meter=meter, payload=n)
+        s0 = backend.all_reduce(partials, payload=n)
         # Line 5: local full-gradient block from the shared margins.
         coeffs0 = loss.dvalue(s0, data.labels) / n
         z_blocks = [
@@ -405,7 +408,7 @@ def fdsvrg_worker_simulation(
                 margins_block(idx, val, blocks[l], partition.bounds[l])
                 for l in range(q)
             ]
-            s_m = simulate_tree_sum(partial_m, meter=meter, payload=cfg.batch_size)
+            s_m = backend.all_reduce(partial_m, payload=cfg.batch_size)
             s_a = s0[ids]
             coef = (loss.dvalue(s_m, y) - loss.dvalue(s_a, y)) / cfg.batch_size
             # Line 11: purely local update on each block.
@@ -416,4 +419,4 @@ def fdsvrg_worker_simulation(
                 g = sparse_part + z_blocks[l] + reg.grad(blocks[l])
                 blocks[l] = blocks[l] - (cfg.eta * float(mask[m])) * g
 
-    return jnp.concatenate(blocks), meter
+    return jnp.concatenate(blocks), backend.meter

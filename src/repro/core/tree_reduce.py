@@ -1,119 +1,25 @@
-"""Tree-structured global sum (paper §4.2, Figure 5).
+"""Back-compat shim — the tree reduce moved to :mod:`repro.dist.tree`.
 
-Three views of the same reduction:
-
-1. ``tree_schedule(q)`` — the explicit pairing schedule from Figure 5, as
-   (round, src, dst) triples.  Used by the simulator and the comm meter;
-   tests check it computes an exact sum for any q and any values.
-
-2. ``simulate_tree_sum`` — runs the schedule on a list of per-worker
-   values (numpy/jnp), returning the sum as the coordinator sees it and
-   metering the traffic.
-
-3. ``psum_tree`` / ``collective_permute_tree`` — the TPU-native mappings:
-   ``jax.lax.psum`` over a mesh axis (the hardware all-reduce *is* a
-   tree/ring), and an explicit log-depth butterfly built from
-   ``lax.ppermute`` for when one wants the paper's exact topology on
-   device (also demonstrates the pattern lowers; used by the dry-run).
+Schedules, the canonical tree-order summation, the simulated executable
+spec, and the TPU-native mappings are all part of the unified distributed
+substrate now (see ``docs/architecture.md``).  Import from ``repro.dist``
+in new code.
 """
 
-from __future__ import annotations
+from repro.dist.tree import (  # noqa: F401
+    broadcast_schedule,
+    collective_permute_tree,
+    psum_tree,
+    simulate_tree_sum,
+    tree_order_sum,
+    tree_schedule,
+)
 
-from typing import Sequence
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.comm import CommMeter
-
-
-def tree_schedule(q: int) -> list[list[tuple[int, int]]]:
-    """Rounds of (src -> dst) sends for a binary-tree reduce of q workers.
-
-    Worker 0 doubles as the coordinator (paper's Figure 5 has a separate
-    coordinator box; topologically it is the tree root).  Round r pairs
-    workers at stride 2^r: src = k + 2^r sends to dst = k for
-    k ≡ 0 (mod 2^(r+1)).
-    """
-    rounds: list[list[tuple[int, int]]] = []
-    stride = 1
-    while stride < q:
-        sends = []
-        k = 0
-        while k + stride < q:
-            sends.append((k + stride, k))
-            k += 2 * stride
-        rounds.append(sends)
-        stride *= 2
-    return rounds
-
-
-def broadcast_schedule(q: int) -> list[list[tuple[int, int]]]:
-    """Reverse-order tree broadcast (root 0 to everyone)."""
-    return [
-        [(dst, src) for (src, dst) in rnd] for rnd in reversed(tree_schedule(q))
-    ]
-
-
-def simulate_tree_sum(
-    values: Sequence[jax.Array] | Sequence[float],
-    meter: CommMeter | None = None,
-    payload: int | None = None,
-) -> jax.Array:
-    """Run the Figure-5 reduce+broadcast over per-worker values.
-
-    Returns the global sum (identical on every worker after broadcast).
-    Meters 2*q*payload scalars like the paper's accounting.
-    """
-    q = len(values)
-    acc = [jnp.asarray(v) for v in values]
-    if payload is None:
-        payload = int(acc[0].size) if hasattr(acc[0], "size") else 1
-    for rnd in tree_schedule(q):
-        for src, dst in rnd:
-            acc[dst] = acc[dst] + acc[src]
-    total = acc[0]
-    # Broadcast back down the tree (reverse order).
-    for rnd in broadcast_schedule(q):
-        for src, dst in rnd:
-            acc[dst] = total
-    if meter is not None:
-        meter.tree_reduce_broadcast(q, payload)
-    return total
-
-
-# ---------------------------------------------------------------------------
-# TPU-native mappings
-# ---------------------------------------------------------------------------
-
-
-def psum_tree(x: jax.Array, axis_name: str) -> jax.Array:
-    """The deployable form: hardware all-reduce over the model axis.
-
-    On TPU this lowers to the ICI tree/ring all-reduce — the exact
-    hardware realization of the paper's Figure 5 (reduce + broadcast in
-    one collective, sum left replicated on every worker).
-    """
-    return jax.lax.psum(x, axis_name)
-
-
-def collective_permute_tree(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
-    """Explicit log-depth all-reduce from ppermute rounds.
-
-    A recursive-doubling butterfly: after round r every worker holds the
-    sum over its 2^(r+1)-aligned group; after log2(q) rounds every worker
-    holds the global sum.  Equivalent to reduce+broadcast in traffic
-    (2q payloads total) but half the rounds; we use it in §Perf as a
-    beyond-paper variant and to show the paper's topology lowers on TPU.
-
-    Requires axis_size to be a power of two (the production meshes are).
-    """
-    if axis_size & (axis_size - 1):
-        raise ValueError(f"axis_size must be a power of two, got {axis_size}")
-    out = x
-    stride = 1
-    while stride < axis_size:
-        perm = [(i, i ^ stride) for i in range(axis_size)]
-        out = out + jax.lax.ppermute(out, axis_name, perm)
-        stride *= 2
-    return out
+__all__ = [
+    "broadcast_schedule",
+    "collective_permute_tree",
+    "psum_tree",
+    "simulate_tree_sum",
+    "tree_order_sum",
+    "tree_schedule",
+]

@@ -1,0 +1,173 @@
+"""The ``Collectives`` protocol and its single-process backends.
+
+A backend is the one object an optimization method talks to for anything
+that crosses (or models crossing) a worker boundary.  It bundles:
+
+* ``q``        — the worker count the method is (simulated as) running on,
+* ``meter``    — a :class:`~repro.dist.meter.CommMeter` every message is
+                 recorded against,
+* ``cluster``  — the :class:`~repro.dist.meter.ClusterModel` used to
+                 accumulate modeled wall-clock,
+
+and exposes two kinds of primitives:
+
+* **executing** collectives (``all_reduce``) that combine per-worker
+  partials *and* meter the traffic, and
+* **metering-only** primitives (``meter_tree``, ``p2p``, ``charge``) for
+  jitted paths where the arithmetic is fused but the accounting must
+  still happen — with the same closed forms, through the same meter.
+
+Backends:
+
+* :class:`LocalBackend`    — single-process reference.  Collectives are
+  computed directly (in canonical tree order, so results are
+  bit-comparable with the other backends) and metered with the §4.5
+  closed forms.  The default for tests.
+* :class:`SimBackend`      — the executable spec: ``all_reduce`` runs the
+  explicit Figure-5 message schedule via
+  :func:`~repro.dist.tree.simulate_tree_sum`.
+* :class:`repro.dist.shardmap.ShardMapBackend` — the deployable path
+  (real ``psum``/butterfly over a mesh axis), in its own module so this
+  one stays importable without touching device state.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, Sequence, runtime_checkable
+
+import jax.numpy as jnp
+
+from repro.dist.meter import ClusterModel, CommMeter, tree_rounds
+from repro.dist.metering import CommReport
+from repro.dist.tree import simulate_tree_sum, tree_order_sum
+
+
+@runtime_checkable
+class Collectives(Protocol):
+    """What an optimization method needs from the distributed substrate."""
+
+    q: int
+    meter: CommMeter
+    cluster: ClusterModel
+
+    def all_reduce(self, parts: Sequence, payload: int | None = None):
+        """Combine per-worker partials into the replicated global sum,
+        metering one tree reduce+broadcast of ``payload`` scalars."""
+        ...
+
+    def meter_tree(self, payload: int, steps: int = 1) -> None:
+        """Meter ``steps`` tree reduce+broadcasts of ``payload`` scalars
+        without executing them (for fused/jitted compute paths)."""
+        ...
+
+    def p2p(self, payload: int, kind: str, rounds: int = 1) -> None:
+        """Meter a point-to-point (or aggregated) transfer of ``payload``
+        scalars under the given kind label."""
+        ...
+
+    def charge(
+        self, *, flops: float = 0.0, scalars: float = 0.0, rounds: float = 0.0
+    ) -> None:
+        """Accumulate modeled wall-clock for a critical-path segment."""
+        ...
+
+    def charge_seconds(self, seconds: float) -> None:
+        """Accumulate pre-computed modeled wall-clock (method-specific
+        formulas, e.g. async server-bound throughput)."""
+        ...
+
+    @property
+    def modeled_time_s(self) -> float: ...
+
+    @property
+    def tree_rounds(self) -> int: ...
+
+    def report(self, method: str = "") -> CommReport: ...
+
+
+class MeteredBackend:
+    """Shared metering/cost machinery; subclasses supply ``all_reduce``."""
+
+    def __init__(self, q: int, cluster: ClusterModel | None = None) -> None:
+        if q < 1:
+            raise ValueError(f"need q >= 1 workers, got {q}")
+        self.q = int(q)
+        self.cluster = cluster or ClusterModel()
+        self.meter = CommMeter()
+        self._modeled_time = 0.0
+
+    # -- metering-only primitives (paper §4.5 closed forms) --------------
+
+    def meter_tree(self, payload: int, steps: int = 1) -> None:
+        self.meter.tree_reduce_broadcast(self.q, payload, steps)
+
+    def p2p(self, payload: int, kind: str, rounds: int = 1) -> None:
+        self.meter.record(kind, payload, rounds)
+
+    # -- modeled wall-clock ----------------------------------------------
+
+    def charge(
+        self, *, flops: float = 0.0, scalars: float = 0.0, rounds: float = 0.0
+    ) -> None:
+        self._modeled_time += self.cluster.time(
+            critical_flops=flops, critical_scalars=scalars, rounds=rounds
+        )
+
+    def charge_seconds(self, seconds: float) -> None:
+        self._modeled_time += float(seconds)
+
+    @property
+    def modeled_time_s(self) -> float:
+        return self._modeled_time
+
+    @property
+    def tree_rounds(self) -> int:
+        """Latency rounds of one tree reduce+broadcast at this q."""
+        return tree_rounds(self.q)
+
+    def _host_all_reduce(self, parts: Sequence, payload: int | None):
+        """Shared host-side reduction: validate one partial per worker,
+        meter the closed form, sum in canonical tree order."""
+        if len(parts) != self.q:
+            raise ValueError(
+                f"all_reduce needs one partial per worker: got {len(parts)} "
+                f"parts for q={self.q}"
+            )
+        parts = [jnp.asarray(p) for p in parts]
+        if payload is None:
+            payload = int(parts[0].size)
+        self.meter_tree(payload)
+        return tree_order_sum(parts)
+
+    def report(self, method: str = "") -> CommReport:
+        return CommReport.from_meter(
+            method=method,
+            q=self.q,
+            meter=self.meter,
+            cluster=self.cluster,
+            modeled_time_s=self._modeled_time,
+        )
+
+
+class LocalBackend(MeteredBackend):
+    """Single-process reference backend.
+
+    ``all_reduce`` sums the partials directly — no message schedule — but
+    in canonical tree order and with the standard accounting, so iterates
+    and meters match the other backends exactly.
+    """
+
+    def all_reduce(self, parts: Sequence, payload: int | None = None):
+        return self._host_all_reduce(parts, payload)
+
+
+class SimBackend(MeteredBackend):
+    """The executable spec: runs the explicit Figure-5 message schedule."""
+
+    def all_reduce(self, parts: Sequence, payload: int | None = None):
+        if len(parts) != self.q:
+            raise ValueError(
+                f"all_reduce needs one partial per worker: got {len(parts)} "
+                f"parts for q={self.q}"
+            )
+        return simulate_tree_sum(parts, meter=self.meter, payload=payload)

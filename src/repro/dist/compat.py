@@ -1,0 +1,44 @@
+"""Version-portable wrappers for jax distributed APIs.
+
+The repo targets the current jax while staying runnable on the 0.4.x
+series baked into the container:
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map`` to
+  ``jax.shard_map``, renaming ``check_rep`` to ``check_vma`` on the way.
+* ``jax.make_mesh`` grew an ``axis_types`` kwarg (with
+  ``jax.sharding.AxisType``) that older releases reject.
+
+Everything in the repo goes through these two wrappers instead of the
+raw APIs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+
+try:  # jax >= 0.6
+    from jax import shard_map as _shard_map
+
+    _CHECK_KWARG = "check_vma"
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KWARG = "check_rep"
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` with the replication/VMA check flag normalized."""
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_CHECK_KWARG: check},
+    )
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], **kwargs: Any):
+    """``jax.make_mesh`` requesting Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None and "axis_types" not in kwargs:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)

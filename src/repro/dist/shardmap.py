@@ -1,0 +1,110 @@
+"""``ShardMapBackend`` — the deployable realization of the substrate.
+
+On device, the paper's Figure-5 tree is the hardware all-reduce: inside a
+``shard_map``-traced worker function, :meth:`ShardMapBackend.device_all_reduce`
+lowers to ``jax.lax.psum`` over the feature ("model") mesh axes, or to the
+explicit ppermute butterfly when ``tree_mode="butterfly"``.  Communication
+cannot be observed from inside the traced computation, so the backend
+meters *statically* on the host — with the same §4.5 closed forms the
+simulation backends use, against the same :class:`~repro.dist.meter.CommMeter`.
+That is the point of the substrate: measured-or-modeled, every method's
+bytes flow through one meter.
+
+``interpret=True`` gives a device-free stand-in for tests: ``all_reduce``
+combines per-worker partials in canonical tree order (the deterministic
+all-reduce semantics — every worker sees identical bits) without any mesh,
+so the equivalence suite can run the "deployable" semantics on one CPU and
+compare iterates and meters bit-for-bit against the other backends.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import compat
+from repro.dist.collectives import MeteredBackend
+from repro.dist.meter import ClusterModel
+from repro.dist.tree import collective_permute_tree
+
+TREE_MODES = ("psum", "butterfly")
+
+
+class ShardMapBackend(MeteredBackend):
+    """Collectives over a jax mesh's feature axes (or their interpretation).
+
+    Exactly one of ``mesh`` / ``q`` must be given:
+
+    * ``mesh`` + ``feature_axes`` — the real thing; ``q`` is the product
+      of the named axis sizes and ``device_all_reduce`` is usable inside
+      ``shard_map``-traced code built via :meth:`shard_map`.
+    * ``q`` with ``interpret=True`` — no devices; ``all_reduce`` runs the
+      canonical tree-order reduction host-side.
+    """
+
+    def __init__(
+        self,
+        mesh=None,
+        feature_axes: Sequence[str] = ("model",),
+        tree_mode: str = "psum",
+        cluster: ClusterModel | None = None,
+        q: int | None = None,
+        interpret: bool = False,
+    ) -> None:
+        if tree_mode not in TREE_MODES:
+            raise ValueError(f"tree_mode must be one of {TREE_MODES}, got {tree_mode!r}")
+        if (mesh is None) == (q is None):
+            raise ValueError("pass exactly one of mesh= or q=")
+        if mesh is not None:
+            q = 1
+            for a in feature_axes:
+                q *= mesh.shape[a]
+        super().__init__(q, cluster)
+        self.mesh = mesh
+        self.feature_axes = tuple(feature_axes)
+        self.tree_mode = tree_mode
+        self.interpret = bool(interpret or mesh is None)
+
+    # -- device path (call inside shard_map-traced code) -----------------
+
+    def device_all_reduce(self, x: jax.Array) -> jax.Array:
+        """All-reduce over the feature axes; only valid under tracing by a
+        ``shard_map`` built on this backend's mesh."""
+        if self.mesh is None:
+            raise ValueError("device_all_reduce requires a real mesh")
+        if self.tree_mode == "psum":
+            return jax.lax.psum(x, self.feature_axes)
+        out = x
+        for a in self.feature_axes:
+            out = collective_permute_tree(out, a, self.mesh.shape[a])
+        return out
+
+    def shard_map(self, f, in_specs, out_specs):
+        """Wrap ``f`` with ``shard_map`` over this backend's mesh."""
+        if self.mesh is None:
+            raise ValueError("shard_map requires a real mesh")
+        return compat.shard_map(f, self.mesh, in_specs, out_specs)
+
+    def device_worker_id(self) -> jax.Array:
+        """Linear worker id across the feature axes (traced code only)."""
+        wid = jnp.zeros((), dtype=jnp.int32)
+        for a in self.feature_axes:
+            wid = wid * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return wid
+
+    # -- host path --------------------------------------------------------
+
+    def all_reduce(self, parts: Sequence, payload: int | None = None):
+        """Interpret-mode all-reduce of per-worker partials.
+
+        Deterministic device all-reduce leaves identical bits on every
+        worker; the canonical tree order is our interpretation of it.
+        """
+        if not self.interpret:
+            raise ValueError(
+                "host all_reduce is only available with interpret=True; "
+                "use device_all_reduce inside shard_map-traced code"
+            )
+        return self._host_all_reduce(parts, payload)

@@ -3,29 +3,25 @@
 ``make_production_mesh`` is a FUNCTION so importing this module never
 touches jax device state; callers (dryrun.py) set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
-import.
+import.  Mesh construction goes through :func:`repro.dist.compat.make_mesh`
+so it works across jax releases (the ``axis_types`` kwarg is newer than
+the 0.4.x series).
 """
 
 from __future__ import annotations
 
-import jax
-
-
-def _mesh(shape, axes):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+from repro.dist.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests (device count permitting)."""
-    return _mesh((data, model), ("data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def chips(mesh) -> int:

@@ -63,8 +63,9 @@ _SUB = textwrap.dedent("""
     from repro.launch.dryrun import _lower_combo, _rules_overrides
     from repro.models import transformer
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.dist.compat import make_mesh
+
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     shapes = {
         "train": InputShape("t", 64, 8, "train"),

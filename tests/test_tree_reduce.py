@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.comm import CommMeter
@@ -60,13 +61,14 @@ def test_broadcast_is_reverse_tree():
 
 
 def test_psum_tree_single_device():
-    mesh = jax.make_mesh((1,), ("model",))
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
 
+    from repro.dist.compat import make_mesh, shard_map
+
+    mesh = make_mesh((1,), ("model",))
     f = shard_map(
         lambda x: psum_tree(x, "model"),
-        mesh=mesh,
+        mesh,
         in_specs=P("model"),
         out_specs=P("model"),
     )
