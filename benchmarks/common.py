@@ -24,7 +24,22 @@ from repro.core.fdsvrg import RunResult, SVRGConfig, run_fdsvrg, run_serial_svrg
 from repro.core.partition import balanced
 from repro.core import baselines
 from repro.data import datasets
+from repro.data.block_csr import BlockCSR
 from repro.dist import ClusterModel, CommReport
+
+# Re-indexing a data set into BlockCSR is host-side numpy work; sweeps call
+# run_method repeatedly with the same (data, q), so amortize it.  Values
+# keep a strong ref to the data object so the id() key cannot be reused.
+_BLOCK_CACHE: dict[tuple[int, int], tuple[object, BlockCSR]] = {}
+
+
+def _block_data(data, q: int) -> BlockCSR:
+    key = (id(data), q)
+    hit = _BLOCK_CACHE.get(key)
+    if hit is None or hit[0] is not data:
+        hit = (data, BlockCSR.from_padded(data, balanced(data.dim, q)))
+        _BLOCK_CACHE[key] = hit
+    return hit[1]
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
 
@@ -118,6 +133,16 @@ def ensure_dir() -> str:
     return d
 
 
+def write_bench_json(name: str, payload: dict) -> str:
+    """Serialize one suite's report as results/benchmarks/BENCH_<name>.json."""
+    import json
+
+    path = os.path.join(ensure_dir(), f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
 def write_csv(name: str, header: list[str], rows: list[list]) -> str:
     path = os.path.join(ensure_dir(), name)
     with open(path, "w", newline="") as f:
@@ -147,7 +172,8 @@ def run_method(
         m = min(max(1, n // u), MAX_INNER)
         cfg = SVRGConfig(eta=eta, inner_steps=m,
                          outer_iters=outer_iters, batch_size=u, seed=seed)
-        return run_fdsvrg(data, balanced(data.dim, q), LOSS, reg, cfg, CLUSTER)
+        return run_fdsvrg(data, balanced(data.dim, q), LOSS, reg, cfg, CLUSTER,
+                          block_data=_block_data(data, q))
     if method == "serial":
         cfg = SVRGConfig(eta=eta, inner_steps=min(n, MAX_INNER),
                          outer_iters=outer_iters, seed=seed)

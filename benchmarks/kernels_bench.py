@@ -1,16 +1,32 @@
 """Pallas kernel micro-benchmarks (interpret mode on CPU measures the
 *reference semantics*; us_per_call here tracks wrapper/oracle overhead and
-regression, not TPU latency — TPU numbers come from the roofline model)."""
+regression, not TPU latency — TPU numbers come from the roofline model).
+
+The ``blockcsr`` section is the PR-2 hot-path comparison: the historical
+masked global-CSR per-worker computation (O(nnz_max) compare/where work
+per row, re-implemented inline here as the baseline since the library no
+longer carries it) against the block-local BlockCSR layout (O(nnz_max/q)
+rows, no masks) — as plain jnp and through the fused Pallas kernels.
+Standalone entry point with a ``--quick`` smoke mode for CI:
+
+    PYTHONPATH=src python -m benchmarks.kernels_bench [--quick]
+
+writes results/benchmarks/kernels_micro.csv and BENCH_kernels.json.
+"""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import write_csv
+from benchmarks.common import write_bench_json, write_csv
+from repro.core.partition import balanced
+from repro.data.block_csr import BlockCSR, local_margins, local_scatter
+from repro.data.synthetic import make_sparse_classification
 from repro.kernels import ops, ref
 
 
@@ -23,15 +39,164 @@ def _timeit(fn, *args, iters=5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def run():
+# ---------------------------------------------------------------------------
+# masked global-CSR baseline (the pattern BlockCSR replaced)
+# ---------------------------------------------------------------------------
+
+
+def _masked_margins(indices, values, w_block, lo):
+    hi = lo + w_block.shape[0]
+    in_block = (indices >= lo) & (indices < hi)
+    local = jnp.where(in_block, indices - lo, 0)
+    return jnp.sum(jnp.where(in_block, w_block[local], 0.0) * values, axis=-1)
+
+
+def _masked_update_3pass(indices, values, coef, w_block, z_block, lo, eta, lam):
+    hi = lo + w_block.shape[0]
+    in_block = (indices >= lo) & (indices < hi)
+    local = jnp.where(in_block, indices - lo, 0)
+    contrib = jnp.where(in_block, values, 0.0) * coef[..., None]
+    g = (  # pass 1: densify the sparse gradient
+        jnp.zeros_like(w_block).at[local.reshape(-1)].add(contrib.reshape(-1))
+    )
+    g = g + z_block + lam * w_block  # pass 2: combine
+    return w_block - eta * g  # pass 3: axpy
+
+
+def _blockcsr_update_fused_jnp(indices, values, coef, w_block, z_block, eta, lam):
+    g = local_scatter(indices, values, coef, w_block.shape[0])
+    return w_block - eta * (g + z_block + lam * w_block)
+
+
+def bench_blockcsr(quick: bool) -> tuple[list[list], dict]:
+    """Per-worker hot-path timings: masked global rows vs block-local rows.
+
+    Sizes mimic a text shard: q workers over [N, nnz_max] global rows;
+    the BlockCSR budget lands near nnz_max/q (Zipf ids are scattered
+    uniformly by the generator).  Timed per single worker, which is the
+    quantity that sets cluster wall-clock.
+    """
+    if quick:
+        d, n, nnz, q, u = 8192, 512, 64, 8, 64
+    else:
+        d, n, nnz, q, u = 65536, 2048, 128, 8, 256
+    iters = 50  # rows here are 30-2000us; average out scheduler noise
+    rng = np.random.default_rng(0)
+    data = make_sparse_classification(
+        dim=d, num_instances=n, nnz_per_instance=nnz, seed=0
+    )
+    part = balanced(d, q)
+    block_data = BlockCSR.from_padded(data, part)
+    lo, hi = part.block(0)
+    block_dim = hi - lo
+    w_blk = jnp.asarray(rng.normal(size=block_dim).astype(np.float32))
+    z_blk = jnp.asarray(rng.normal(size=block_dim).astype(np.float32))
+    bidx, bval = block_data.block(0)
+    ids = jnp.asarray(rng.integers(0, n, size=u).astype(np.int32))
+    coef = jnp.asarray(rng.normal(size=u).astype(np.float32))
+    eta, lam = 0.1, 1e-4
+    gidx_u, gval_u = data.indices[ids], data.values[ids]
+    bidx_u, bval_u = bidx[ids], bval[ids]
+
+    rows: list[list] = []
+    summary: dict = {
+        "shape": {"d": d, "N": n, "nnz_max": nnz, "q": q, "u": u,
+                  "blockcsr_budget": max(block_data.nnz_budgets)},
+    }
+
+    # --- full-data margins (the outer full-gradient phase) ---
+    t_masked = _timeit(
+        jax.jit(lambda i, v, w: _masked_margins(i, v, w, lo)),
+        data.indices, data.values, w_blk, iters=iters,
+    )
+    t_local = _timeit(jax.jit(local_margins), bidx, bval, w_blk, iters=iters)
+    t_kernel = _timeit(
+        lambda i, v, w: ops.sparse_margins(i, v, w, interpret=True),
+        bidx, bval, w_blk, iters=iters,
+    )
+    rows += [
+        [f"margin_fullgrad_masked_global_q{q}", f"{t_masked:.1f}",
+         f"[N={n},nnz={nnz}]"],
+        [f"margin_fullgrad_blockcsr_jnp_q{q}", f"{t_local:.1f}",
+         f"[N={n},nnz={max(block_data.nnz_budgets)}]"],
+        [f"margin_fullgrad_blockcsr_kernel_q{q}", f"{t_kernel:.1f}",
+         "pallas interpret=True"],
+    ]
+    summary["margin_fullgrad"] = {
+        "masked_us": t_masked,
+        "blockcsr_us": t_local,
+        "blockcsr_kernel_interpret_us": t_kernel,
+        "hot_path_speedup_vs_masked": t_masked / t_local,
+        "kernel_interpret_overhead_x": t_kernel / t_local,
+    }
+
+    # --- sampled-row margins (the inner loop) ---
+    t_masked = _timeit(
+        jax.jit(lambda i, v, w: _masked_margins(i, v, w, lo)),
+        gidx_u, gval_u, w_blk, iters=iters,
+    )
+    t_local = _timeit(jax.jit(local_margins), bidx_u, bval_u, w_blk, iters=iters)
+    t_kernel = _timeit(
+        lambda i, v, w: ops.sparse_margins(i, v, w, interpret=True),
+        bidx_u, bval_u, w_blk, iters=iters,
+    )
+    rows += [
+        [f"margin_inner_masked_global_q{q}", f"{t_masked:.1f}", f"[u={u}]"],
+        [f"margin_inner_blockcsr_jnp_q{q}", f"{t_local:.1f}", f"[u={u}]"],
+        [f"margin_inner_blockcsr_kernel_q{q}", f"{t_kernel:.1f}",
+         "pallas interpret=True"],
+    ]
+    summary["margin_inner"] = {
+        "masked_us": t_masked,
+        "blockcsr_us": t_local,
+        "blockcsr_kernel_interpret_us": t_kernel,
+        "hot_path_speedup_vs_masked": t_masked / t_local,
+        "kernel_interpret_overhead_x": t_kernel / t_local,
+    }
+
+    # --- scatter-grad + VR update (three sweeps -> one fused pass) ---
+    t_masked = _timeit(
+        jax.jit(lambda i, v, c, w, z: _masked_update_3pass(
+            i, v, c, w, z, lo, eta, lam)),
+        gidx_u, gval_u, coef, w_blk, z_blk, iters=iters,
+    )
+    t_local = _timeit(
+        jax.jit(lambda i, v, c, w, z: _blockcsr_update_fused_jnp(
+            i, v, c, w, z, eta, lam)),
+        bidx_u, bval_u, coef, w_blk, z_blk, iters=iters,
+    )
+    t_kernel = _timeit(
+        lambda i, v, c, w, z: ops.fused_block_update(
+            w, i, v, c, z, jnp.float32(eta), lam=lam, interpret=True),
+        bidx_u, bval_u, coef, w_blk, z_blk, iters=iters,
+    )
+    rows += [
+        [f"scatter_update_masked_3pass_q{q}", f"{t_masked:.1f}",
+         f"[u={u},d/q={block_dim}]"],
+        [f"scatter_update_blockcsr_jnp_q{q}", f"{t_local:.1f}",
+         f"[u={u},d/q={block_dim}]"],
+        [f"scatter_update_blockcsr_kernel_q{q}", f"{t_kernel:.1f}",
+         "pallas interpret=True"],
+    ]
+    summary["scatter_update"] = {
+        "masked_us": t_masked,
+        "blockcsr_us": t_local,
+        "blockcsr_kernel_interpret_us": t_kernel,
+        "hot_path_speedup_vs_masked": t_masked / t_local,
+        "kernel_interpret_overhead_x": t_kernel / t_local,
+    }
+    return rows, summary
+
+
+def run(quick: bool = False):
     rng = np.random.default_rng(0)
     rows = []
 
-    d, n = 8192, 2048
+    d, n = (2048, 512) if quick else (8192, 2048)
     w = jnp.asarray(rng.normal(size=d).astype(np.float32))
     dmat = jnp.asarray(rng.normal(size=(d, n)).astype(np.float32))
     rows.append([
-        "fd_matvec_ref_8192x2048",
+        f"fd_matvec_ref_{d}x{n}",
         f"{_timeit(jax.jit(lambda a, b: ref.fd_matvec_ref(a[:, None], b)), w, dmat):.1f}",
         "jnp oracle",
     ])
@@ -68,15 +233,45 @@ def run():
         "pallas interpret=True",
     ])
 
+    blockcsr_rows, blockcsr_summary = bench_blockcsr(quick)
+    rows += blockcsr_rows
+
     path = write_csv("kernels_micro.csv", ["name", "us_per_call", "derived"], rows)
-    return path, rows
+    return path, rows, blockcsr_summary
+
+
+def report_payload(rows, blockcsr, wall_us: float, quick: bool) -> dict:
+    """The BENCH_kernels.json schema — one builder for the standalone and
+    the aggregate (benchmarks.run) entry points."""
+    return {
+        "wall_us": wall_us,
+        "quick": quick,
+        "kernels": {str(r[0]): {"us_per_call": r[1], "derived": r[2]}
+                    for r in rows if len(r) >= 3},
+        "blockcsr": blockcsr,
+    }
 
 
 def main():
-    path, rows = run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes (CI smoke mode)")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    path, rows, blockcsr = run(quick=args.quick)
+    write_bench_json("kernels", report_payload(
+        rows, blockcsr, (time.perf_counter() - t0) * 1e6, args.quick))
     print(f"kernels: wrote {len(rows)} rows to {path}")
     for r in rows:
         print("  ", ",".join(map(str, r)))
+    for section in ("margin_fullgrad", "margin_inner", "scatter_update"):
+        s = blockcsr[section]
+        print(
+            f"  {section}: blockcsr hot path {s['hot_path_speedup_vs_masked']:.2f}x "
+            f"vs masked global-CSR (kernel interpret-mode semantics check "
+            f"{s['kernel_interpret_overhead_x']:.1f}x the jnp time; TPU numbers "
+            f"come from the roofline model)"
+        )
 
 
 if __name__ == "__main__":

@@ -11,20 +11,9 @@ results/benchmarks/BENCH_<name>.json — schema in docs/benchmarks.md.
 from __future__ import annotations
 
 import argparse
-import json
-import os
-import sys
 import time
 
-
-def write_bench_json(name: str, payload: dict) -> str:
-    """Serialize one suite's report as results/benchmarks/BENCH_<name>.json."""
-    from benchmarks.common import ensure_dir
-
-    path = os.path.join(ensure_dir(), f"BENCH_{name}.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-    return path
+from benchmarks.common import write_bench_json
 
 
 def main() -> None:
@@ -88,15 +77,13 @@ def main() -> None:
     })
 
     t = time.perf_counter()
-    _, rows = kernels_bench.run()
+    _, rows, blockcsr = kernels_bench.run(quick=args.quick)
     for r in rows:
         print(",".join(map(str, r)))
     us = stamp("kernels_micro_total", t, f"{len(rows)} kernels")
-    write_bench_json("kernels", {
-        "wall_us": us,
-        "kernels": {str(r[0]): {"us_per_call": r[1], "derived": r[2]}
-                    for r in rows if len(r) >= 3},
-    })
+    write_bench_json(
+        "kernels", kernels_bench.report_payload(rows, blockcsr, us, args.quick)
+    )
 
     t = time.perf_counter()
     _, rows = roofline.run()

@@ -96,10 +96,10 @@ def run_dsvrg(
         )
         mask = _option_mask(rng, m_local, cfg.option)
         w = _inner_epoch(
-            data.indices, data.values, data.labels,
+            (data.indices,), (data.values,), data.labels,
             w, z_data, s0,
-            jnp.asarray(samples), cfg.eta, reg.lam, jnp.asarray(mask),
-            loss.name, reg.name, 1, None,
+            jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
+            loss.name, reg.name, reg.lam, (data.dim,), False,
         )
         # center -> J: full gradient (d); J -> center: parameter (d)
         backend.p2p(2 * d, "dsvrg_handoff", rounds=2)
@@ -153,10 +153,10 @@ def run_syn_svrg(
         samples = _draw_samples(rng, n, cfg.inner_steps, q)
         mask = _option_mask(rng, cfg.inner_steps, cfg.option)
         w = _inner_epoch(
-            data.indices, data.values, data.labels,
+            (data.indices,), (data.values,), data.labels,
             w, z_data, s0,
-            jnp.asarray(samples), cfg.eta, reg.lam, jnp.asarray(mask),
-            loss.name, reg.name, 1, None,
+            jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
+            loss.name, reg.name, reg.lam, (data.dim,), False,
         )
         # per step: q workers pull dense w (q*d), push sparse VR grads
         # (2*nnz keys+values each) -- the <key,value> concession.

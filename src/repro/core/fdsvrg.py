@@ -14,6 +14,16 @@ Three implementations, one update rule:
   simulation (each worker only ever touches its own ``w^(l)`` and
   ``D^(l)``); slow, used by tests to certify exact equivalence.
 
+All three run on the block-local layout
+(:class:`repro.data.block_csr.BlockCSR`): each worker's rows carry only
+its own block's entries with local ids, so per-worker gather/scatter work
+is O(nnz_max/q) — no membership masks anywhere on the hot path.  Every
+implementation takes ``use_kernels``: ``True`` routes the two hot paths
+through the fused Pallas kernels (:func:`repro.kernels.ops.sparse_margins`
+and :func:`repro.kernels.ops.fused_block_update`, interpret-mode on CPU),
+``False`` is the pure-jnp numerics oracle.  The two paths are
+bit-identical in interpret mode (asserted in tests).
+
 All communication — executed or modeled — goes through a
 :class:`repro.dist.Collectives` backend, so FD-SVRG and the baselines in
 :mod:`repro.core.baselines` report bytes and modeled wall-clock through
@@ -33,15 +43,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import losses as losses_lib
-from repro.core.partition import FeaturePartition
+from repro.core.partition import FeaturePartition, balanced
 from repro.dist import ClusterModel, Collectives, CommMeter, SimBackend, tree_order_sum
-from repro.data.sparse import (
-    PaddedCSR,
-    margins,
-    margins_block,
-    scatter_grad,
-    scatter_grad_block,
-)
+from repro.data.sparse import PaddedCSR, margins_rows, scatter_grad
+from repro.data.block_csr import BlockCSR, local_margins, local_scatter
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,7 +99,7 @@ class RunResult:
 def _objective_impl(indices, values, labels, w, lam, loss_name, reg_name):
     loss = losses_lib.LOSSES[loss_name]
     reg = losses_lib.Regularizer(reg_name, lam)
-    s = jnp.sum(w[indices] * values, axis=1)
+    s = margins_rows(indices, values, w)
     return jnp.mean(loss.value(s, labels)) + reg.value(w)
 
 
@@ -111,7 +117,7 @@ def objective(
 def _full_grad_impl(indices, values, labels, w, loss_name):
     """Data part of the full gradient plus the cached margins s0 = w^T x_i."""
     loss = losses_lib.LOSSES[loss_name]
-    s0 = jnp.sum(w[indices] * values, axis=1)
+    s0 = margins_rows(indices, values, w)
     coeffs = loss.dvalue(s0, labels) / labels.shape[0]
     z_data = scatter_grad(indices, values, coeffs, w.shape[0])
     return z_data, s0
@@ -124,64 +130,143 @@ def full_gradient(
 
 
 # ---------------------------------------------------------------------------
+# Block-local hot paths (shared by every implementation)
+# ---------------------------------------------------------------------------
+
+
+def _bounds(block_dims: tuple[int, ...]) -> tuple[int, ...]:
+    b = [0]
+    for d in block_dims:
+        b.append(b[-1] + d)
+    return tuple(b)
+
+
+def _kernel_lam(reg_name: str, lam: float) -> float:
+    """The L2-family lam the fused update kernel folds in (0 for 'none')."""
+    if reg_name == "l2":
+        return float(lam)
+    if reg_name == "none":
+        return 0.0
+    raise ValueError(
+        f"use_kernels=True supports the L2 regularizer family, got {reg_name!r}"
+    )
+
+
+def _block_margins(idx, val, w_block, use_kernels: bool):
+    """Per-block partial margins over block-LOCAL rows (gather, no mask)."""
+    if use_kernels:
+        return ops.sparse_margins(idx, val, w_block)
+    return local_margins(idx, val, w_block)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("loss_name", "block_dims", "use_kernels")
+)
+def _full_grad_blocks(
+    block_indices, block_values, labels, w, loss_name, block_dims, use_kernels
+):
+    """Feature-decomposed full gradient: per-block partial margins summed
+    in tree order (Alg 1 lines 3-4), then a purely block-local scatter
+    (line 5).  Returns the concatenated z and the cached margins s0."""
+    loss = losses_lib.LOSSES[loss_name]
+    q = len(block_dims)
+    bounds = _bounds(block_dims)
+    parts = [
+        _block_margins(
+            block_indices[l],
+            block_values[l],
+            jax.lax.slice_in_dim(w, bounds[l], bounds[l + 1]),
+            use_kernels,
+        )
+        for l in range(q)
+    ]
+    s0 = tree_order_sum(parts)
+    coeffs = loss.dvalue(s0, labels) / labels.shape[0]
+    z_blocks = [
+        local_scatter(block_indices[l], block_values[l], coeffs, block_dims[l])
+        for l in range(q)
+    ]
+    z_data = jnp.concatenate(z_blocks) if q > 1 else z_blocks[0]
+    return z_data, s0
+
+
+# ---------------------------------------------------------------------------
 # Inner epoch (shared by serial and simulated-FD paths)
 # ---------------------------------------------------------------------------
 
 
 @functools.partial(
-    jax.jit, static_argnames=("loss_name", "reg_name", "num_blocks", "bounds")
+    jax.jit,
+    static_argnames=("loss_name", "reg_name", "lam", "block_dims", "use_kernels"),
 )
 def _inner_epoch(
-    indices,
-    values,
+    block_indices,  # per-block int32[N, nnz_l], LOCAL ids
+    block_values,  # per-block float[N, nnz_l]
     labels,
     w0,
     z_data,
     s0,
     samples,  # int32[M, u]
     eta,
-    lam,
     step_mask,  # float32[M] (1 = apply update; Option II masks the tail)
     loss_name: str,
     reg_name: str,
-    num_blocks: int,
-    bounds: tuple[int, ...] | None,
+    lam: float,
+    block_dims: tuple[int, ...],
+    use_kernels: bool,
 ):
-    """M variance-reduced updates.
+    """M variance-reduced updates on the block-local layout.
 
-    When ``num_blocks > 1`` the margin of each sampled instance is computed
-    the feature-distributed way: q per-block partial dots summed in block
-    order (matching the tree reduce), certifying the decomposition the
-    paper relies on.  ``num_blocks == 1`` is the serial path.
+    The margin of each sampled instance is computed the
+    feature-distributed way: q per-block partial dots (local gathers, no
+    masks) summed in block order (matching the tree reduce), certifying
+    the decomposition the paper relies on.  ``len(block_dims) == 1`` is
+    the serial path.  ``use_kernels`` swaps the gather-margin and the
+    scatter+update for the fused Pallas kernels.
     """
     loss = losses_lib.LOSSES[loss_name]
     reg = losses_lib.Regularizer(reg_name, lam)
     u = samples.shape[1]
-    n = labels.shape[0]
-
-    def margin_of(w, idx, val):
-        if num_blocks == 1:
-            return jnp.sum(w[idx] * val, axis=-1)
-        parts = []
-        for l in range(num_blocks):
-            lo, hi = bounds[l], bounds[l + 1]
-            block = jax.lax.slice_in_dim(w, lo, hi)
-            parts.append(margins_block(idx, val, block, lo))
-        # Pairwise summation mirroring Figure 5 exactly (shared with the
-        # simulation and interpret backends, so floating point matches).
-        return tree_order_sum(parts)
+    q = len(block_dims)
+    bounds = _bounds(block_dims)
+    kernel_lam = _kernel_lam(reg_name, lam) if use_kernels else 0.0
 
     def step(w, inp):
         ids, mask = inp  # ids: int32[u]
-        idx = indices[ids]  # [u, nnz]
-        val = values[ids]
         y = labels[ids]
-        s_m = margin_of(w, idx, val)
+        rows = [(block_indices[l][ids], block_values[l][ids]) for l in range(q)]
+        parts = [
+            _block_margins(
+                rows[l][0],
+                rows[l][1],
+                jax.lax.slice_in_dim(w, bounds[l], bounds[l + 1]),
+                use_kernels,
+            )
+            for l in range(q)
+        ]
+        # Pairwise summation mirroring Figure 5 exactly (shared with the
+        # simulation and interpret backends, so floating point matches).
+        s_m = tree_order_sum(parts)
         s_anchor = s0[ids]
         coef = (loss.dvalue(s_m, y) - loss.dvalue(s_anchor, y)) / u
-        data_grad = scatter_grad(idx, val, coef, w.shape[0])
-        g = data_grad + z_data + reg.grad(w)
-        return w - (eta * mask) * g, None
+        eta_m = eta * mask
+        new_blocks = []
+        for l in range(q):
+            idx, val = rows[l]
+            w_blk = jax.lax.slice_in_dim(w, bounds[l], bounds[l + 1])
+            z_blk = jax.lax.slice_in_dim(z_data, bounds[l], bounds[l + 1])
+            if use_kernels:
+                new_blocks.append(
+                    ops.fused_block_update(
+                        w_blk, idx, val, coef, z_blk, eta_m, lam=kernel_lam
+                    )
+                )
+            else:
+                g = local_scatter(idx, val, coef, block_dims[l])
+                g = g + z_blk + reg.grad(w_blk)
+                new_blocks.append(w_blk - eta_m * g)
+        w_next = jnp.concatenate(new_blocks) if q > 1 else new_blocks[0]
+        return w_next, None
 
     w_final, _ = jax.lax.scan(step, w0, (samples, step_mask))
     return w_final
@@ -208,31 +293,41 @@ def run_serial_svrg(
     loss: losses_lib.MarginLoss,
     reg: losses_lib.Regularizer,
     cfg: SVRGConfig,
+    *,
+    use_kernels: bool = False,
 ) -> RunResult:
+    if use_kernels:
+        _kernel_lam(reg.name, reg.lam)  # validate up front
+    # The q=1 BlockCSR shares the PaddedCSR arrays (local ids == global).
+    block_data = BlockCSR.from_padded(data, balanced(data.dim, 1))
+    block_dims = block_data.block_dims
     rng = np.random.default_rng(cfg.seed)
     w = jnp.zeros((data.dim,), dtype=data.values.dtype)
     meter = CommMeter()  # serial: stays empty
     history: list[OuterRecord] = []
     t_start = time.perf_counter()
     for t in range(cfg.outer_iters):
-        z_data, s0 = full_gradient(data, w, loss)
+        z_data, s0 = _full_grad_blocks(
+            block_data.indices, block_data.values, data.labels, w,
+            loss.name, block_dims, use_kernels,
+        )
         samples = _draw_samples(rng, data.num_instances, cfg.inner_steps, cfg.batch_size)
         mask = _option_mask(rng, cfg.inner_steps, cfg.option)
         w = _inner_epoch(
-            data.indices,
-            data.values,
+            block_data.indices,
+            block_data.values,
             data.labels,
             w,
             z_data,
             s0,
             jnp.asarray(samples),
             cfg.eta,
-            reg.lam,
             jnp.asarray(mask),
             loss.name,
             reg.name,
-            1,
-            None,
+            reg.lam,
+            block_dims,
+            use_kernels,
         )
         obj = objective(data, w, loss, reg)
         gnorm = float(jnp.linalg.norm(z_data + reg.grad(w)))
@@ -255,13 +350,19 @@ def run_fdsvrg(
     cfg: SVRGConfig,
     cluster: ClusterModel | None = None,
     backend: Collectives | None = None,
+    *,
+    use_kernels: bool = False,
+    block_data: BlockCSR | None = None,
 ) -> RunResult:
     """Algorithm 1 with q = partition.num_blocks feature-sharded workers.
 
     Numerics: identical update sequence to serial SVRG (Theorem: the
     decomposition w^T x = sum_l w^(l)T x^(l) is exact; summation follows
-    the tree order).  Communication/time: the paper's accounting, metered
-    through ``backend`` (default: a fresh ``SimBackend``) —
+    the tree order), computed on the block-local
+    :class:`~repro.data.block_csr.BlockCSR` layout (built once here, or
+    passed in as ``block_data`` to amortize across runs).
+    Communication/time: the paper's accounting, metered through
+    ``backend`` (default: a fresh ``SimBackend``) —
 
       outer t:  tree reduce+broadcast of the N-vector  w_t^T D  -> 2qN scalars
       inner m:  tree reduce+broadcast of u margins      -> 2qu scalars
@@ -274,6 +375,13 @@ def run_fdsvrg(
             f"backend has q={backend.q} workers but the partition has "
             f"{q} blocks"
         )
+    if use_kernels:
+        _kernel_lam(reg.name, reg.lam)
+    if block_data is None:
+        block_data = BlockCSR.from_padded(data, partition)
+    elif block_data.partition.bounds != partition.bounds:
+        raise ValueError("block_data was built for a different partition")
+    block_dims = block_data.block_dims
     rng = np.random.default_rng(cfg.seed)
     w = jnp.zeros((data.dim,), dtype=data.values.dtype)
     history: list[OuterRecord] = []
@@ -284,7 +392,10 @@ def run_fdsvrg(
 
     for t in range(cfg.outer_iters):
         # --- full-gradient phase (Alg 1 lines 3-5) ---
-        z_data, s0 = full_gradient(data, w, loss)
+        z_data, s0 = _full_grad_blocks(
+            block_data.indices, block_data.values, data.labels, w,
+            loss.name, block_dims, use_kernels,
+        )
         backend.meter_tree(payload=n)  # w_t^T D summed across blocks
         # per-worker compute: margins over the local block (N*nnz/q flops-ish)
         # + local scatter of the full gradient.
@@ -297,20 +408,20 @@ def run_fdsvrg(
         samples = _draw_samples(rng, n, cfg.inner_steps, cfg.batch_size)
         mask = _option_mask(rng, cfg.inner_steps, cfg.option)
         w = _inner_epoch(
-            data.indices,
-            data.values,
+            block_data.indices,
+            block_data.values,
             data.labels,
             w,
             z_data,
             s0,
             jnp.asarray(samples),
             cfg.eta,
-            reg.lam,
             jnp.asarray(mask),
             loss.name,
             reg.name,
-            q,
-            partition.bounds,
+            reg.lam,
+            block_dims,
+            use_kernels,
         )
         # --- inner-loop communication (Alg 1 lines 9-11): one tree round
         # per mini-batch of u margins; M steps total (metered in aggregate).
@@ -347,6 +458,29 @@ def run_fdsvrg(
 # ---------------------------------------------------------------------------
 
 
+@functools.partial(jax.jit, static_argnames=("use_kernels",))
+def _sim_margins(idx, val, w_block, use_kernels):
+    return _block_margins(idx, val, w_block, use_kernels)
+
+
+@functools.partial(jax.jit, static_argnames=("block_dim",))
+def _sim_scatter(idx, val, coeffs, block_dim):
+    return local_scatter(idx, val, coeffs, block_dim)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("reg_name", "lam", "use_kernels")
+)
+def _sim_update(w_block, idx, val, coef, z_block, eta_m, reg_name, lam, use_kernels):
+    if use_kernels:
+        return ops.fused_block_update(
+            w_block, idx, val, coef, z_block, eta_m, lam=_kernel_lam(reg_name, lam)
+        )
+    reg = losses_lib.Regularizer(reg_name, lam)
+    g = local_scatter(idx, val, coef, w_block.shape[0]) + z_block + reg.grad(w_block)
+    return w_block - eta_m * g
+
+
 def fdsvrg_worker_simulation(
     data: PaddedCSR,
     partition: FeaturePartition,
@@ -354,69 +488,69 @@ def fdsvrg_worker_simulation(
     reg: losses_lib.Regularizer,
     cfg: SVRGConfig,
     backend: Collectives | None = None,
+    *,
+    use_kernels: bool = False,
 ) -> tuple[jax.Array, CommMeter]:
     """Object-level Algorithm 1: a list of per-worker states, every
     cross-worker scalar passes through ``backend.all_reduce`` (default: a
-    fresh ``SimBackend`` running the explicit Figure-5 schedule).
+    fresh ``SimBackend`` running the explicit Figure-5 schedule).  Each
+    worker holds only its block-local CSR shard and its ``w^(l)``.
 
     Returns the concatenated final parameter and the backend's comm meter.
-    Deliberately unjitted and slow — this is the executable spec, and the
-    vehicle for the backend-equivalence tests.
+    Deliberately step-by-step and slow — this is the executable spec, and
+    the vehicle for the backend-equivalence tests.
     """
     q = partition.num_blocks
     backend = backend or SimBackend(q)
+    if use_kernels:
+        _kernel_lam(reg.name, reg.lam)
+    block_data = BlockCSR.from_padded(data, partition)
     rng = np.random.default_rng(cfg.seed)
     n = data.num_instances
 
     # Worker state: w^(l)
     blocks = [
-        jnp.zeros((partition.bounds[l + 1] - partition.bounds[l],), dtype=data.values.dtype)
-        for l in range(q)
+        jnp.zeros((dl,), dtype=data.values.dtype) for dl in block_data.block_dims
     ]
 
     for t in range(cfg.outer_iters):
         # Lines 3-4: each worker computes w_t^(l)T D^(l); tree-sum the N-vector.
         partials = [
-            margins_block(data.indices, data.values, blocks[l], partition.bounds[l])
+            _sim_margins(*block_data.block(l), blocks[l], use_kernels)
             for l in range(q)
         ]
         s0 = backend.all_reduce(partials, payload=n)
         # Line 5: local full-gradient block from the shared margins.
         coeffs0 = loss.dvalue(s0, data.labels) / n
         z_blocks = [
-            scatter_grad_block(
-                data.indices,
-                data.values,
-                coeffs0,
-                partition.bounds[l],
-                blocks[l].shape[0],
-            )
+            _sim_scatter(*block_data.block(l), coeffs0, block_data.block_dims[l])
             for l in range(q)
         ]
 
-        anchors = [b for b in blocks]  # w̃_0^(l) = w_t^(l)
         samples = _draw_samples(rng, n, cfg.inner_steps, cfg.batch_size)
         mask = _option_mask(rng, cfg.inner_steps, cfg.option)
 
         for m in range(cfg.inner_steps):
             ids = samples[m]
-            idx = data.indices[ids]
-            val = data.values[ids]
+            rows = [
+                (block_data.indices[l][ids], block_data.values[l][ids])
+                for l in range(q)
+            ]
             y = data.labels[ids]
             # Lines 9-10: per-worker partial margins, tree-summed (u scalars).
             partial_m = [
-                margins_block(idx, val, blocks[l], partition.bounds[l])
+                _sim_margins(rows[l][0], rows[l][1], blocks[l], use_kernels)
                 for l in range(q)
             ]
             s_m = backend.all_reduce(partial_m, payload=cfg.batch_size)
             s_a = s0[ids]
             coef = (loss.dvalue(s_m, y) - loss.dvalue(s_a, y)) / cfg.batch_size
+            eta_m = jnp.asarray(cfg.eta * float(mask[m]), dtype=blocks[0].dtype)
             # Line 11: purely local update on each block.
             for l in range(q):
-                sparse_part = scatter_grad_block(
-                    idx, val, coef, partition.bounds[l], blocks[l].shape[0]
+                blocks[l] = _sim_update(
+                    blocks[l], rows[l][0], rows[l][1], coef, z_blocks[l],
+                    eta_m, reg.name, reg.lam, use_kernels,
                 )
-                g = sparse_part + z_blocks[l] + reg.grad(blocks[l])
-                blocks[l] = blocks[l] - (cfg.eta * float(mask[m])) * g
 
     return jnp.concatenate(blocks), backend.meter

@@ -3,11 +3,14 @@
 This is the TPU-native realization of Algorithm 1, built on
 :class:`repro.dist.ShardMapBackend`.  The parameter vector ``w`` lives
 feature-sharded across the given mesh axes (every chip is one of the
-paper's Workers); the padded-CSR instance data is replicated (the paper
-replicates instances across feature shards by construction — each worker
-stores the feature *slice* of every instance; on TPU we keep the global
-index/value rows and mask to the local block, which is the shape-static
-equivalent).
+paper's Workers); the instance data arrives in the block-local sharded
+layout (:meth:`repro.data.block_csr.BlockCSR.stacked`): a ``[q, N, B]``
+stack of per-block re-indexed padded rows, sharded on the leading axis,
+so each worker holds only its own block's entries with LOCAL feature ids
+and ``B ≈ nnz_max / q``.  That is the paper's construction verbatim —
+worker l stores the feature *slice* of every instance — and it kills the
+masked global-row fallback this module used to carry: no membership
+compares, no id rebasing, O(nnz_max/q) gather/scatter work per chip.
 
 Communication per inner step is exactly one all-reduce of ``u`` scalars
 over the feature axes — the hardware tree standing in for Figure 5.  The
@@ -20,9 +23,15 @@ the backend's ``tree_mode``:
     (:func:`repro.dist.tree.collective_permute_tree`) proving the
     paper's explicit topology lowers on TPU; used in §Perf comparisons.
 
+``use_kernels=True`` routes the chip-local margin and scatter+update
+through the fused Pallas kernels (:mod:`repro.kernels`), interpret-mode
+off-TPU; ``False`` is the jnp numerics oracle — bit-identical in
+interpret mode.
+
 On-device traffic cannot be observed from traced code, so
 :func:`run_fdsvrg_sharded` meters the closed forms host-side through the
-backend — the same accounting, the same meter, as the simulation paths.
+backend — the same accounting, the same meter, and (since it also charges
+the same compute terms) the same modeled time as the simulation paths.
 """
 
 from __future__ import annotations
@@ -37,14 +46,18 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import losses as losses_lib
+from repro.core.fdsvrg import _kernel_lam
+from repro.core.partition import balanced
+from repro.data.block_csr import BlockCSR, local_margins, local_scatter
 from repro.dist import ClusterModel, ShardMapBackend
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
 class FDSVRGShardedConfig:
     dim: int
     num_instances: int
-    nnz_max: int
+    nnz_max: int  # nnz budget of the GLOBAL rows (metering uses this)
     eta: float
     inner_steps: int
     batch_size: int = 16
@@ -52,6 +65,7 @@ class FDSVRGShardedConfig:
     reg_name: str = "l2"
     lam: float = 1e-4
     tree_mode: str = "psum"  # or "butterfly"
+    use_kernels: bool = False
 
 
 def make_outer_iteration(
@@ -63,13 +77,18 @@ def make_outer_iteration(
     """Build the jittable one-outer-iteration function.
 
     Signature of the returned fn:
-      (w, indices, values, labels, samples) -> (w_next, full_grad_norm)
+      (w, block_indices, block_values, labels, samples)
+        -> (w_next, full_grad_norm)
     with shardings:
-      w:        P(feature_axes)           (feature-distributed, the paper)
-      indices:  P(None, None)             (replicated padded-CSR rows)
-      values:   P(None, None)
-      labels:   P(None)
-      samples:  P(None, None)             int32[M, u]
+      w:             P(feature_axes)        (feature-distributed, the paper)
+      block_indices: P(feature_axes, None, None)  int32[q, N, B] local ids
+      block_values:  P(feature_axes, None, None)  float[q, N, B]
+      labels:        P(None)
+      samples:       P(None, None)          int32[M, u]
+
+    Build the data stack once with
+    ``BlockCSR.from_padded(data, balanced(dim, q)).stacked()`` (or let
+    :func:`run_fdsvrg_sharded` do it).
     """
     if backend is None:
         backend = ShardMapBackend(
@@ -86,59 +105,58 @@ def make_outer_iteration(
     block = cfg.dim // q
     loss = losses_lib.LOSSES[cfg.loss_name]
     reg = losses_lib.Regularizer(cfg.reg_name, cfg.lam)
+    kernel_lam = _kernel_lam(cfg.reg_name, cfg.lam) if cfg.use_kernels else 0.0
     axes = backend.feature_axes
 
-    def worker(w_blk, indices, values, labels, samples):
-        lo = backend.device_worker_id() * block
+    def worker(w_blk, bidx, bval, labels, samples):
+        bidx = bidx[0]  # [N, B]: the leading q-axis shards to size 1
+        bval = bval[0]
 
-        def local_margins(w_b, idx, val):
-            in_blk = (idx >= lo) & (idx < lo + block)
-            loc = jnp.where(in_blk, idx - lo, 0)
-            return jnp.sum(jnp.where(in_blk, w_b[loc], 0.0) * val, axis=-1)
-
-        def local_scatter(idx, val, coeffs):
-            in_blk = (idx >= lo) & (idx < lo + block)
-            loc = jnp.where(in_blk, idx - lo, 0)
-            contrib = jnp.where(in_blk, val, 0.0) * coeffs[..., None]
-            return (
-                jnp.zeros((block,), dtype=val.dtype)
-                .at[loc.reshape(-1)]
-                .add(contrib.reshape(-1))
-            )
+        def margin_of(w_b, idx, val):
+            if cfg.use_kernels:
+                return ops.sparse_margins(idx, val, w_b)
+            return local_margins(idx, val, w_b)
 
         # ---- full-gradient phase: one N-vector all-reduce ----
-        partial_s0 = local_margins(w_blk, indices, values)  # [N]
+        partial_s0 = margin_of(w_blk, bidx, bval)  # [N]
         s0 = backend.device_all_reduce(partial_s0)
         coeffs0 = loss.dvalue(s0, labels) / labels.shape[0]
-        z_blk = local_scatter(indices, values, coeffs0)
+        z_blk = local_scatter(bidx, bval, coeffs0, block)
         gnorm_sq = jax.lax.psum(
             jnp.sum((z_blk + reg.grad(w_blk)) ** 2), axes
         )
 
         # ---- inner loop: one u-scalar all-reduce per step ----
         def step(w_b, ids):
-            idx = indices[ids]
-            val = values[ids]
+            idx = bidx[ids]
+            val = bval[ids]
             y = labels[ids]
-            partial = local_margins(w_b, idx, val)
+            partial = margin_of(w_b, idx, val)
             s_m = backend.device_all_reduce(partial)
             coef = (loss.dvalue(s_m, y) - loss.dvalue(s0[ids], y)) / cfg.batch_size
-            g = local_scatter(idx, val, coef) + z_blk + reg.grad(w_b)
-            return w_b - cfg.eta * g, None
+            if cfg.use_kernels:
+                w_next = ops.fused_block_update(
+                    w_b, idx, val, coef, z_blk, cfg.eta, lam=kernel_lam
+                )
+            else:
+                g = local_scatter(idx, val, coef, block) + z_blk + reg.grad(w_b)
+                w_next = w_b - cfg.eta * g
+            return w_next, None
 
         w_blk, _ = jax.lax.scan(step, w_blk, samples)
         return w_blk, gnorm_sq
 
     spec_w = P(axes)
+    spec_rows = P(axes, None, None)
     mapped = backend.shard_map(
         worker,
-        in_specs=(spec_w, P(None, None), P(None, None), P(None), P(None, None)),
+        in_specs=(spec_w, spec_rows, spec_rows, P(None), P(None, None)),
         out_specs=(spec_w, P()),
     )
 
     @jax.jit
-    def outer_iteration(w, indices, values, labels, samples):
-        w_next, gnorm_sq = mapped(w, indices, values, labels, samples)
+    def outer_iteration(w, block_indices, block_values, labels, samples):
+        w_next, gnorm_sq = mapped(w, block_indices, block_values, labels, samples)
         return w_next, jnp.sqrt(gnorm_sq)
 
     return outer_iteration
@@ -156,42 +174,53 @@ def run_fdsvrg_sharded(
 ):
     """Metered driver for the deployable path.
 
-    Runs ``outer_iters`` outer iterations of :func:`make_outer_iteration`
-    on ``data`` (a PaddedCSR) and meters the closed-form traffic — one
-    N-payload tree per outer plus one u-payload tree per inner step —
+    Re-indexes ``data`` (a PaddedCSR) into the block-local stacked layout
+    for the mesh's q workers, runs ``outer_iters`` outer iterations of
+    :func:`make_outer_iteration`, and meters the closed-form traffic —
+    one N-payload tree per outer plus one u-payload tree per inner step —
     through the backend, so the shard_map path reports bytes-on-the-wire
-    from the same meter as every other method.  Modeled time stays a
-    ``ClusterModel`` quantity (comm terms only — compute is real here);
-    measured host wall-clock is reported per outer in the history, never
-    mixed into the model.  Returns ``(w, history, backend)`` with history
-    entries of ``(outer, grad_norm, comm_scalars, wall_time_s)``.
+    from the same meter as every other method.  Modeled time charges the
+    same §4.5 closed forms as :func:`repro.core.fdsvrg.run_fdsvrg` —
+    compute AND communication terms — so the two drivers' modeled-time
+    accounting is directly comparable (asserted in tests); measured host
+    wall-clock is reported per outer in the history, never mixed into the
+    model.  Returns ``(w, history, backend)`` with history entries of
+    ``(outer, grad_norm, comm_scalars, wall_time_s)``.
     """
     backend = backend or ShardMapBackend(
         mesh=mesh, feature_axes=feature_axes,
         tree_mode=cfg.tree_mode, cluster=cluster,
     )
     step = make_outer_iteration(mesh, cfg, feature_axes, backend=backend)
+    q = backend.q
+    block_data = BlockCSR.from_padded(data, balanced(cfg.dim, q))
+    bidx, bval = block_data.stacked()
     rng = np.random.default_rng(seed)
     w = jnp.zeros((cfg.dim,), jnp.float32)
+    n, nnz, u = cfg.num_instances, cfg.nnz_max, cfg.batch_size
     history = []
     for t in range(outer_iters):
         samples = rng.integers(
-            0, cfg.num_instances, size=(cfg.inner_steps, cfg.batch_size)
+            0, cfg.num_instances, size=(cfg.inner_steps, u)
         ).astype(np.int32)
         t0 = time.perf_counter()
-        w, gnorm = step(w, data.indices, data.values, data.labels,
-                        jnp.asarray(samples))
+        w, gnorm = step(w, bidx, bval, data.labels, jnp.asarray(samples))
         gnorm = float(gnorm)
         wall = time.perf_counter() - t0
-        backend.meter_tree(payload=cfg.num_instances)
-        backend.charge(scalars=2 * backend.q * cfg.num_instances,
-                       rounds=backend.tree_rounds)
-        backend.meter_tree(payload=cfg.batch_size, steps=cfg.inner_steps)
+        # Same closed forms as run_fdsvrg: full-gradient phase ...
+        backend.meter_tree(payload=n)
+        backend.charge(
+            flops=2.0 * n * nnz / q * 2,  # margins + scatter, per worker
+            scalars=2 * q * n,
+            rounds=backend.tree_rounds,
+        )
+        # ... and the M inner steps (dense O(d/q) + sparse O(u*nnz) work).
+        backend.meter_tree(payload=u, steps=cfg.inner_steps)
         backend.charge_seconds(
             cfg.inner_steps
             * backend.cluster.time(
-                critical_flops=0.0,
-                critical_scalars=2 * backend.q * cfg.batch_size,
+                critical_flops=2.0 * (cfg.dim / q + u * nnz),
+                critical_scalars=2 * q * u,
                 rounds=backend.tree_rounds,
             )
         )
@@ -203,8 +232,8 @@ def input_shardings(mesh: Mesh, feature_axes: Sequence[str] = ("data", "model"))
     axes = tuple(feature_axes)
     return (
         NamedSharding(mesh, P(axes)),
-        NamedSharding(mesh, P(None, None)),
-        NamedSharding(mesh, P(None, None)),
+        NamedSharding(mesh, P(axes, None, None)),
+        NamedSharding(mesh, P(axes, None, None)),
         NamedSharding(mesh, P(None)),
         NamedSharding(mesh, P(None, None)),
     )

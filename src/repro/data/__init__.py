@@ -1,4 +1,12 @@
 from repro.data.sparse import PaddedCSR
+from repro.data.block_csr import BlockCSR, local_margins, local_scatter
 from repro.data import datasets, synthetic
 
-__all__ = ["PaddedCSR", "datasets", "synthetic"]
+__all__ = [
+    "PaddedCSR",
+    "BlockCSR",
+    "local_margins",
+    "local_scatter",
+    "datasets",
+    "synthetic",
+]

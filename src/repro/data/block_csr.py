@@ -1,0 +1,194 @@
+"""Block-local sharded CSR: the feature-distributed layout of a PaddedCSR.
+
+The masked global-CSR view of a feature shard keeps *global* padded rows
+``(indices, values)`` on every worker and masks per-block membership on
+every access — ``(idx >= lo) & (idx < hi)`` plus a ``where``-guarded
+gather, O(nnz_max) work per worker per row regardless of q.  That defeats
+the paper's whole point: worker l's compute should shrink with the number
+of workers.
+
+``BlockCSR`` re-indexes once, at load time.  For each feature block l of a
+:class:`~repro.core.partition.FeaturePartition` it stores the block's
+entries of every instance as padded rows with a *per-block* nnz budget:
+
+    indices[l]: int32[N, nnz_l]   LOCAL feature ids in [0, dim_l), pad 0
+    values[l]:  float[N, nnz_l]   matching values, pad 0.0
+
+so worker l gathers against its local dense ``w`` block with zero masking
+arithmetic — the hot-path cost is O(nnz_l) ≈ O(nnz_max / q).  Padding with
+(local id 0, value 0.0) is safe for every operation here (dots and
+scatter-adds): a zero value contributes nothing.
+
+Entry order within a row is preserved from the source PaddedCSR, so
+per-feature scatter accumulation order — and therefore floating point —
+matches the global layout.
+
+:func:`local_margins` / :func:`local_scatter` are the two block-local hot
+paths; they are also the numerics contract for the fused Pallas kernels in
+:mod:`repro.kernels` (``sparse_margin``, ``fused_update``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.sparse import PaddedCSR
+
+if TYPE_CHECKING:  # import would cycle through repro.core.__init__ at runtime
+    from repro.core.partition import FeaturePartition
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCSR:
+    """A PaddedCSR re-indexed into q block-local shards."""
+
+    partition: FeaturePartition
+    indices: tuple[jax.Array, ...]  # per block: int32[N, nnz_l], local ids
+    values: tuple[jax.Array, ...]  # per block: float[N, nnz_l]
+    labels: jax.Array  # float[N], in {-1, +1}
+    dim: int  # global d
+
+    @property
+    def num_blocks(self) -> int:
+        return self.partition.num_blocks
+
+    @property
+    def num_instances(self) -> int:
+        return int(self.indices[0].shape[0])
+
+    @property
+    def block_dims(self) -> tuple[int, ...]:
+        return tuple(self.partition.block_sizes())
+
+    @property
+    def nnz_budgets(self) -> tuple[int, ...]:
+        return tuple(int(i.shape[1]) for i in self.indices)
+
+    def block(self, l: int) -> tuple[jax.Array, jax.Array]:
+        return self.indices[l], self.values[l]
+
+    @classmethod
+    def from_padded(
+        cls,
+        data: PaddedCSR,
+        partition: FeaturePartition,
+        *,
+        lane_multiple: int = 1,
+    ) -> "BlockCSR":
+        """Build the block-local layout (host-side, once per data set).
+
+        ``lane_multiple`` rounds each block's nnz budget up (TPU lane
+        padding); 1 keeps the budgets tight, which the equivalence tests
+        use.  The single-block partition reuses the PaddedCSR rows as-is
+        (local ids == global ids when lo = 0), so the q = 1 path is
+        bit-for-bit the global layout.
+        """
+        if partition.dim != data.dim:
+            raise ValueError(
+                f"partition covers dim={partition.dim}, data has dim={data.dim}"
+            )
+        if partition.num_blocks == 1:
+            return cls(
+                partition=partition,
+                indices=(data.indices,),
+                values=(data.values,),
+                labels=data.labels,
+                dim=data.dim,
+            )
+        idx = np.asarray(data.indices)
+        val = np.asarray(data.values)
+        n = idx.shape[0]
+        block_indices: list[jax.Array] = []
+        block_values: list[jax.Array] = []
+        for l in range(partition.num_blocks):
+            lo, hi = partition.block(l)
+            in_blk = (idx >= lo) & (idx < hi) & (val != 0.0)
+            counts = in_blk.sum(axis=1)
+            budget = max(1, int(counts.max()) if n else 1)
+            budget += (-budget) % lane_multiple
+            out_idx = np.zeros((n, budget), dtype=np.int32)
+            out_val = np.zeros((n, budget), dtype=val.dtype)
+            rows, cols = np.nonzero(in_blk)  # row-major: preserves row order
+            # position of each entry within its (compacted) row
+            pos = np.arange(rows.size) - np.searchsorted(rows, rows, side="left")
+            out_idx[rows, pos] = idx[rows, cols] - lo
+            out_val[rows, pos] = val[rows, cols]
+            block_indices.append(jnp.asarray(out_idx))
+            block_values.append(jnp.asarray(out_val))
+        return cls(
+            partition=partition,
+            indices=tuple(block_indices),
+            values=tuple(block_values),
+            labels=data.labels,
+            dim=data.dim,
+        )
+
+    def stacked(self, budget: int | None = None) -> tuple[jax.Array, jax.Array]:
+        """Uniform-budget [q, N, B] index/value stacks for ``shard_map``.
+
+        shard_map shards need identical shapes per worker, so every block
+        is padded up to a common nnz budget (default: the max per-block
+        budget).  Shard the leading axis over the feature mesh axes and
+        each worker receives only its O(nnz_max/q)-wide local rows.
+        """
+        common = max(self.nnz_budgets)
+        if budget is not None:
+            if budget < common:
+                raise ValueError(f"budget {budget} < required {common}")
+            common = budget
+        idx = jnp.stack(
+            [
+                jnp.pad(i, ((0, 0), (0, common - i.shape[1])))
+                for i in self.indices
+            ]
+        )
+        val = jnp.stack(
+            [
+                jnp.pad(v, ((0, 0), (0, common - v.shape[1])))
+                for v in self.values
+            ]
+        )
+        return idx, val
+
+    def nnz_total(self) -> int:
+        return int(sum(jnp.sum(v != 0.0) for v in self.values))
+
+
+def aot_nnz_budget(nnz_max: int, q: int) -> int:
+    """Stacked-layout nnz budget for AOT (dry-run / perf) shapes.
+
+    The runtime budget is data-dependent (``BlockCSR.stacked``); for
+    compile-only shapes we model nnz_max/q with 4x slack for skewed text
+    feature popularity, never below one lane octet.  Keep in lockstep
+    with what ``run_fdsvrg_sharded`` feeds the compiled step.
+    """
+    return max(8, -(-nnz_max // q) * 4)
+
+
+def local_margins(
+    indices: jax.Array, values: jax.Array, w_block: jax.Array
+) -> jax.Array:
+    """s^(l)_i = w^(l)T x^(l)_i from block-LOCAL padded rows.
+
+    No membership mask, no id arithmetic: ``indices`` are already local to
+    ``w_block``.  Works on [N, nnz_l] (full data) and [u, nnz_l] (sampled
+    rows) alike.
+    """
+    return jnp.sum(w_block[indices] * values, axis=-1)
+
+
+def local_scatter(
+    indices: jax.Array,
+    values: jax.Array,
+    coeffs: jax.Array,
+    block_dim: int,
+) -> jax.Array:
+    """sum_i coeffs_i * x^(l)_i as a dense block vector, local ids only."""
+    flat_idx = indices.reshape(-1)
+    flat_val = (values * coeffs[..., None]).reshape(-1)
+    return jnp.zeros((block_dim,), dtype=values.dtype).at[flat_idx].add(flat_val)

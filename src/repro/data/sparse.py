@@ -10,11 +10,14 @@ want static shapes, so we store each instance with a fixed nnz budget:
 Padding with (index 0, value 0.0) is safe for every operation used here
 (dots and scatter-adds), because a zero value contributes nothing.
 
-The feature-distributed view of the same matrix keeps *global* feature ids
-but masks per-block membership, so a worker's shard is (indices, values,
-mask) with the mask selecting ids in [lo, hi).  Gathers against a local
-dense w block subtract ``lo``; masked-out lanes read w[0] and are zeroed
-by the mask, which keeps everything shape-static.
+The feature-distributed view of the same matrix lives in
+:mod:`repro.data.block_csr`: per-block re-indexed padded rows with a
+per-block nnz budget, so a worker's gather/scatter work is O(nnz_max/q)
+against local ids with zero masking arithmetic.  (The historical
+masked-global view — keep global ids everywhere and select ids in
+[lo, hi) with ``(idx >= lo) & (idx < hi)`` on every access — cost every
+worker the full O(nnz_max) per row and survives only as the oracle the
+BlockCSR property tests compare against.)
 """
 
 from __future__ import annotations
@@ -51,38 +54,28 @@ class PaddedCSR:
 
     def to_dense(self) -> np.ndarray:
         """Dense d x N matrix (tests / tiny data only)."""
-        n, _ = self.indices.shape
+        n, nnz = self.indices.shape
         out = np.zeros((self.dim, n), dtype=np.float32)
-        idx = np.asarray(self.indices)
-        val = np.asarray(self.values)
-        for i in range(n):
-            # np.add.at handles repeated indices (padding collides on 0).
-            np.add.at(out[:, i], idx[i], val[i])
+        idx = np.asarray(self.indices).reshape(-1)
+        val = np.asarray(self.values, dtype=np.float32).reshape(-1)
+        cols = np.repeat(np.arange(n), nnz)
+        # np.add.at handles repeated indices (padding collides on 0).
+        np.add.at(out, (idx, cols), val)
         return out
+
+
+def margins_rows(
+    indices: jax.Array, values: jax.Array, w: jax.Array
+) -> jax.Array:
+    """s_i = w^T x_i from padded rows; the one definition of the margin
+    gather every global-layout path shares (objective, full gradient,
+    serial inner loop)."""
+    return jnp.sum(w[indices] * values, axis=-1)
 
 
 def margins(data: PaddedCSR, w: jax.Array) -> jax.Array:
     """s_i = w^T x_i for all instances; w is the dense d-vector."""
-    gathered = w[data.indices]  # [N, nnz]
-    return jnp.sum(gathered * data.values, axis=1)
-
-
-def margins_block(
-    indices: jax.Array,
-    values: jax.Array,
-    w_block: jax.Array,
-    lo: int,
-) -> jax.Array:
-    """Partial margins from one feature block [lo, lo+len(w_block)).
-
-    ``indices``/``values`` are global padded-CSR rows; entries outside the
-    block are masked out.  Returns s^(l)_i = w^(l)T x^(l)_i.
-    """
-    hi = lo + w_block.shape[0]
-    in_block = (indices >= lo) & (indices < hi)
-    local = jnp.where(in_block, indices - lo, 0)
-    gathered = jnp.where(in_block, w_block[local], 0.0)
-    return jnp.sum(gathered * values, axis=-1)
+    return margins_rows(data.indices, data.values, w)
 
 
 def scatter_grad(
@@ -98,20 +91,3 @@ def scatter_grad(
     flat_idx = indices.reshape(-1)
     flat_val = (values * coeffs[:, None]).reshape(-1)
     return jnp.zeros((dim,), dtype=values.dtype).at[flat_idx].add(flat_val)
-
-
-def scatter_grad_block(
-    indices: jax.Array,
-    values: jax.Array,
-    coeffs: jax.Array,
-    lo: int,
-    block_dim: int,
-) -> jax.Array:
-    """Feature-block view of :func:`scatter_grad` — only coords in [lo, lo+block_dim)."""
-    hi = lo + block_dim
-    in_block = (indices >= lo) & (indices < hi)
-    local = jnp.where(in_block, indices - lo, 0)
-    contrib = jnp.where(in_block, values, 0.0) * coeffs[..., None]
-    flat_idx = local.reshape(-1)
-    flat_val = contrib.reshape(-1)
-    return jnp.zeros((block_dim,), dtype=values.dtype).at[flat_idx].add(flat_val)

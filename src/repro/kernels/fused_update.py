@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused scatter-grad + variance-reduced SVRG update.
+
+Algorithm 1 line 11, per worker and per inner step:
+
+    g^(l)  = sum_i coef_i * x^(l)_i          (scatter over local ids)
+    w^(l)' = w^(l) - eta * (g^(l) + z^(l) + lam * w^(l))
+
+Unfused this is three sweeps over the d/q-sized block per step — densify
+the sparse gradient, add the cached full gradient, axpy the regularized
+update — each reading and writing HBM.  The kernel keeps the block
+resident in VMEM (see sparse_margin.py for the d/q sizing argument) and
+does one read of each operand and one write: scatter-accumulate the u
+sampled rows into a fresh accumulator, then the fused elementwise update.
+
+``eta`` arrives as a runtime (1, 1) scalar because Option II masks the
+step size per inner step (eta * mask_m) and the kernel must not retrace
+per step; ``lam`` is a compile-time constant of the run.  Only the L2
+family fuses the regularizer path (lam = 0 covers "none"); L1 stays on
+the reference path.
+
+``interpret=True`` (CPU) is the numerics contract: the scatter and the
+update are computed with exactly the reference's jnp expression tree —
+``w - eta * ((g + z) + lam * w)`` in that association order — so the
+``use_kernels`` path is bit-identical to the reference path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_update_kernel(lam: float, w_ref, idx_ref, val_ref, coef_ref,
+                         z_ref, eta_ref, out_ref):
+    w = w_ref[0, :]  # [d_block]
+    contrib = val_ref[...] * coef_ref[0, :][:, None]  # [u, nnz_l]
+    g = (
+        jnp.zeros_like(w)
+        .at[idx_ref[...].reshape(-1)]
+        .add(contrib.reshape(-1))
+    )
+    eta = eta_ref[0, 0]
+    out_ref[0, :] = w - eta * (g + z_ref[0, :] + lam * w)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "interpret"))
+def fused_update(
+    w: jax.Array,  # [1, d_block]
+    indices: jax.Array,  # int32[u, nnz_l], local ids
+    values: jax.Array,  # [u, nnz_l]
+    coef: jax.Array,  # [1, u]
+    z: jax.Array,  # [1, d_block]
+    eta: jax.Array,  # [1, 1] runtime step size (eta * option mask)
+    *,
+    lam: float,
+    interpret: bool = False,
+) -> jax.Array:  # [1, d_block] float32
+    one, d_block = w.shape
+    assert one == 1 and z.shape == w.shape
+    u, nnz = indices.shape
+    assert values.shape == (u, nnz) and coef.shape == (1, u)
+    assert eta.shape == (1, 1)
+
+    # Single grid step: the whole block stays VMEM-resident, which is the
+    # point — scatter targets cannot be tiled without cross-tile traffic.
+    spec_vec = pl.BlockSpec((1, d_block), lambda: (0, 0))
+    spec_rows = pl.BlockSpec((u, nnz), lambda: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_fused_update_kernel, lam),
+        grid=(),
+        in_specs=[
+            spec_vec,
+            spec_rows,
+            spec_rows,
+            pl.BlockSpec((1, u), lambda: (0, 0)),
+            spec_vec,
+            pl.BlockSpec((1, 1), lambda: (0, 0)),
+        ],
+        out_specs=spec_vec,
+        out_shape=jax.ShapeDtypeStruct((1, d_block), jnp.float32),
+        interpret=interpret,
+    )(w, indices, values, coef, z, eta)

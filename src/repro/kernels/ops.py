@@ -16,7 +16,9 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.fd_matvec import fd_matvec
 from repro.kernels.flash_decode import flash_decode
+from repro.kernels.fused_update import fused_update
 from repro.kernels.logistic_grad import logistic_grad
+from repro.kernels.sparse_margin import sparse_margin
 from repro.kernels.svrg_update import svrg_update
 
 
@@ -32,6 +34,58 @@ def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, constant_values=value)
+
+
+def sparse_margins(
+    indices: jax.Array,  # int32[N, nnz_l], block-LOCAL ids (BlockCSR rows)
+    values: jax.Array,  # [N, nnz_l]
+    w_block: jax.Array,  # [d_block]
+    *,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:  # [N] float32
+    """Fused gather-margin over one block's local CSR rows (the FD-SVRG
+    margin hot path).  ``block_rows=None`` keeps all rows in one tile,
+    which is also the shape the bit-identity contract is stated for."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n = indices.shape[0]
+    if block_rows is None:
+        block_rows = max(n, 1)
+    idx2 = _pad_to(indices, 0, block_rows)
+    val2 = _pad_to(values, 0, block_rows)
+    out = sparse_margin(
+        w_block[None, :], idx2, val2, block_rows=block_rows, interpret=interpret
+    )
+    return out[0, :n]
+
+
+def fused_block_update(
+    w_block: jax.Array,  # [d_block]
+    indices: jax.Array,  # int32[u, nnz_l], block-LOCAL ids
+    values: jax.Array,  # [u, nnz_l]
+    coef: jax.Array,  # [u]
+    z_block: jax.Array,  # [d_block]
+    eta: jax.Array | float,  # runtime scalar (eta * option mask)
+    *,
+    lam: float,
+    interpret: bool | None = None,
+) -> jax.Array:  # [d_block]
+    """Fused scatter-grad + variance-reduced parameter update on one
+    block: w - eta * (scatter(coef * x) + z + lam * w) in a single pass
+    (L2 family; lam = 0 covers the unregularized path)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    d = w_block.shape[0]
+    out = fused_update(
+        w_block[None, :],
+        indices,
+        values,
+        coef[None, :],
+        z_block[None, :],
+        jnp.asarray(eta, dtype=w_block.dtype)[None, None],
+        lam=lam,
+        interpret=interpret,
+    )
+    return out[0, :d]
 
 
 def margins_dense(
@@ -119,6 +173,8 @@ def decode_attention(
 
 
 __all__ = [
+    "sparse_margins",
+    "fused_block_update",
     "margins_dense",
     "loss_and_grad",
     "svrg_dense_update",

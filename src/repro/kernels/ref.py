@@ -23,6 +23,37 @@ def logistic_grad_ref(s: jax.Array, y: jax.Array) -> tuple[jax.Array, jax.Array]
     return loss, dloss
 
 
+def sparse_margin_ref(
+    w: jax.Array,  # [d_block]
+    indices: jax.Array,  # int32[N, nnz_l], block-LOCAL ids
+    values: jax.Array,  # [N, nnz_l]
+) -> jax.Array:  # [N]
+    """Block-local gather-margin: s_i = sum_k w[idx[i,k]] * val[i,k]."""
+    return jnp.sum(w[indices] * values, axis=-1)
+
+
+def fused_update_ref(
+    w: jax.Array,  # [d_block]
+    indices: jax.Array,  # int32[u, nnz_l], block-LOCAL ids
+    values: jax.Array,  # [u, nnz_l]
+    coef: jax.Array,  # [u]
+    z: jax.Array,  # [d_block]
+    eta: jax.Array | float,
+    *,
+    lam: float,
+) -> jax.Array:  # [d_block]
+    """Fused scatter-grad + variance-reduced update (L2 family):
+    w - eta * (scatter(coef * x) + z + lam * w), in exactly the reference
+    association order of the FD-SVRG inner loop."""
+    contrib = values * coef[..., None]
+    g = (
+        jnp.zeros_like(w)
+        .at[indices.reshape(-1)]
+        .add(contrib.reshape(-1))
+    )
+    return w - eta * (g + z + lam * w)
+
+
 def svrg_update_ref(
     w: jax.Array, g_sparse: jax.Array, z: jax.Array, *, eta: float, lam: float
 ) -> jax.Array:

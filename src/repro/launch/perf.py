@@ -119,10 +119,13 @@ def pair_fdsvrg() -> list[dict]:
         cfg = FDSVRGShardedConfig(dim=d, num_instances=n, nnz_max=nnz, eta=0.1,
                                   inner_steps=m, batch_size=u, tree_mode=tree_mode)
         step = make_outer_iteration(mesh, cfg, feature_axes=("data", "model"))
+        from repro.data.block_csr import aot_nnz_budget
+
+        bnnz = aot_nnz_budget(nnz, q)  # block-local stacked rows, nnz/q + slack
         args = (
             jax.ShapeDtypeStruct((d,), jnp.float32),
-            jax.ShapeDtypeStruct((n, nnz), jnp.int32),
-            jax.ShapeDtypeStruct((n, nnz), jnp.float32),
+            jax.ShapeDtypeStruct((q, n, bnnz), jnp.int32),
+            jax.ShapeDtypeStruct((q, n, bnnz), jnp.float32),
             jax.ShapeDtypeStruct((n,), jnp.float32),
             jax.ShapeDtypeStruct((m, u), jnp.int32),
         )

@@ -109,6 +109,79 @@ def test_option_II_runs_and_converges(tiny_data):
 
 
 # ---------------------------------------------------------------------------
+# 1b. Fused-kernel path ≡ reference path (bit-identical, interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def test_serial_use_kernels_bit_identical(tiny_data):
+    cfg = SVRGConfig(eta=0.2, inner_steps=24, outer_iters=2, batch_size=2, seed=11)
+    a = run_serial_svrg(tiny_data, LOSS, REG, cfg, use_kernels=False)
+    b = run_serial_svrg(tiny_data, LOSS, REG, cfg, use_kernels=True)
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+
+
+@pytest.mark.parametrize("q", [2, 4, 7])
+def test_fdsvrg_use_kernels_bit_identical(tiny_data, q):
+    cfg = SVRGConfig(eta=0.2, inner_steps=16, outer_iters=2, batch_size=2, seed=5)
+    part = balanced(tiny_data.dim, q)
+    a = run_fdsvrg(tiny_data, part, LOSS, REG, cfg, use_kernels=False)
+    b = run_fdsvrg(tiny_data, part, LOSS, REG, cfg, use_kernels=True)
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+    # metering must be layout- and kernel-independent
+    assert a.meter.total_scalars == b.meter.total_scalars
+    # and the kernel path still matches serial within tolerance
+    serial = run_serial_svrg(tiny_data, LOSS, REG, cfg)
+    np.testing.assert_allclose(
+        np.asarray(b.w), np.asarray(serial.w), rtol=2e-4, atol=2e-6
+    )
+
+
+@pytest.mark.parametrize("q", [2, 5])
+def test_worker_simulation_use_kernels_bit_identical(tiny_data, q):
+    cfg = SVRGConfig(eta=0.2, inner_steps=8, outer_iters=2, seed=7)
+    part = balanced(tiny_data.dim, q)
+    wa, _ = fdsvrg_worker_simulation(tiny_data, part, LOSS, REG, cfg,
+                                     use_kernels=False)
+    wb, _ = fdsvrg_worker_simulation(tiny_data, part, LOSS, REG, cfg,
+                                     use_kernels=True)
+    np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
+
+
+def test_use_kernels_option_II_and_minibatch(tiny_data):
+    """Option II's masked tail steps and u>1 must survive the fused path."""
+    cfg = SVRGConfig(eta=0.2, inner_steps=16, outer_iters=2, batch_size=4,
+                     option="II", seed=3)
+    a = run_fdsvrg(tiny_data, balanced(tiny_data.dim, 4), LOSS, REG, cfg,
+                   use_kernels=False)
+    b = run_fdsvrg(tiny_data, balanced(tiny_data.dim, 4), LOSS, REG, cfg,
+                   use_kernels=True)
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+
+
+def test_use_kernels_rejects_l1():
+    data = make_sparse_classification(
+        dim=64, num_instances=8, nnz_per_instance=4, seed=0
+    )
+    cfg = SVRGConfig(eta=0.1, inner_steps=2, outer_iters=1)
+    with pytest.raises(ValueError, match="L2"):
+        run_serial_svrg(data, LOSS, losses.l1(1e-3), cfg, use_kernels=True)
+
+
+def test_fdsvrg_accepts_prebuilt_block_data(tiny_data):
+    from repro.data.block_csr import BlockCSR
+
+    part = balanced(tiny_data.dim, 4)
+    block_data = BlockCSR.from_padded(tiny_data, part)
+    cfg = SVRGConfig(eta=0.2, inner_steps=8, outer_iters=1, seed=1)
+    a = run_fdsvrg(tiny_data, part, LOSS, REG, cfg, block_data=block_data)
+    b = run_fdsvrg(tiny_data, part, LOSS, REG, cfg)
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+    with pytest.raises(ValueError, match="partition"):
+        run_fdsvrg(tiny_data, balanced(tiny_data.dim, 2), LOSS, REG, cfg,
+                   block_data=block_data)
+
+
+# ---------------------------------------------------------------------------
 # 2. Communication accounting (paper §4.5)
 # ---------------------------------------------------------------------------
 

@@ -3,6 +3,10 @@
 Single-device mesh in-process; an 8-device feature-sharded run executes in
 a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the
 main test process must keep seeing exactly 1 device).
+
+The shard_map path consumes the block-local stacked layout
+(BlockCSR.stacked): [q, N, B] re-indexed rows sharded over the feature
+axes, so workers never see global ids.
 """
 
 import os
@@ -16,19 +20,21 @@ import numpy as np
 import pytest
 
 from repro.core import losses
-from repro.core.fdsvrg import SVRGConfig, run_serial_svrg
+from repro.core.fdsvrg import SVRGConfig, run_fdsvrg, run_serial_svrg
 from repro.core.fdsvrg_shardmap import (
     FDSVRGShardedConfig,
     input_shardings,
     make_outer_iteration,
+    run_fdsvrg_sharded,
 )
+from repro.core.partition import balanced
+from repro.data.block_csr import BlockCSR
 from repro.data.synthetic import make_sparse_classification
+from repro.dist import SimBackend
 
 
-def _reference_run(data, eta, inner, outers, u, lam, seed):
-    cfg = SVRGConfig(eta=eta, inner_steps=inner, outer_iters=outers,
-                     batch_size=u, seed=seed)
-    return run_serial_svrg(data, losses.logistic, losses.l2(lam), cfg)
+def _stacked(data, q):
+    return BlockCSR.from_padded(data, balanced(data.dim, q)).stacked()
 
 
 def test_shardmap_single_device_matches_serial():
@@ -42,28 +48,34 @@ def test_shardmap_single_device_matches_serial():
         eta=eta, inner_steps=inner, batch_size=u, lam=lam,
     )
     step = make_outer_iteration(mesh, cfg, feature_axes=("model",))
+    bidx, bval = _stacked(data, 1)
 
     rng = np.random.default_rng(7)
     w = jnp.zeros((data.dim,), jnp.float32)
     for t in range(outers):
         samples = rng.integers(0, data.num_instances, size=(inner, u)).astype(np.int32)
-        w, gnorm = step(w, data.indices, data.values, data.labels,
-                        jnp.asarray(samples))
+        w, gnorm = step(w, bidx, bval, data.labels, jnp.asarray(samples))
     assert np.all(np.isfinite(np.asarray(w)))
     assert float(gnorm) >= 0.0
 
     # same sample stream through the serial reference
     rng = np.random.default_rng(7)
-    w_ref = jnp.zeros((data.dim,), jnp.float32)
-    from repro.core.fdsvrg import _inner_epoch, full_gradient
+    cfg_ref = SVRGConfig(eta=eta, inner_steps=inner, outer_iters=outers,
+                         batch_size=u, seed=0)
+    from repro.core.fdsvrg import _full_grad_blocks, _inner_epoch
 
+    block = BlockCSR.from_padded(data, balanced(data.dim, 1))
+    w_ref = jnp.zeros((data.dim,), jnp.float32)
     for t in range(outers):
-        z, s0 = full_gradient(data, w_ref, losses.logistic)
+        z, s0 = _full_grad_blocks(
+            block.indices, block.values, data.labels, w_ref,
+            "logistic", block.block_dims, False,
+        )
         samples = rng.integers(0, data.num_instances, size=(inner, u)).astype(np.int32)
         w_ref = _inner_epoch(
-            data.indices, data.values, data.labels, w_ref, z, s0,
-            jnp.asarray(samples), eta, lam,
-            jnp.ones(inner, jnp.float32), "logistic", "l2", 1, None,
+            block.indices, block.values, data.labels, w_ref, z, s0,
+            jnp.asarray(samples), eta, jnp.ones(inner, jnp.float32),
+            "logistic", "l2", lam, block.block_dims, False,
         )
     np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref), rtol=2e-4, atol=1e-6)
 
@@ -78,12 +90,75 @@ def test_shardmap_butterfly_mode_single_device():
         eta=0.1, inner_steps=8, batch_size=1, tree_mode="butterfly",
     )
     step = make_outer_iteration(mesh, cfg, feature_axes=("model",))
+    bidx, bval = _stacked(data, 1)
     samples = np.zeros((8, 1), dtype=np.int32)
     w, gnorm = step(
         jnp.zeros((data.dim,), jnp.float32),
-        data.indices, data.values, data.labels, jnp.asarray(samples),
+        bidx, bval, data.labels, jnp.asarray(samples),
     )
     assert np.all(np.isfinite(np.asarray(w)))
+
+
+def test_shardmap_use_kernels_bit_identical_single_device():
+    """The fused-kernel worker (interpret mode) must produce bit-identical
+    iterates to the jnp reference worker — same mesh, same samples."""
+    data = make_sparse_classification(
+        dim=384, num_instances=48, nnz_per_instance=8, seed=3
+    )
+    mesh = jax.make_mesh((1,), ("model",))
+    samples = np.random.default_rng(5).integers(
+        0, data.num_instances, size=(12, 2)
+    ).astype(np.int32)
+    bidx, bval = _stacked(data, 1)
+    results = {}
+    for use_kernels in (False, True):
+        cfg = FDSVRGShardedConfig(
+            dim=data.dim, num_instances=data.num_instances, nnz_max=data.nnz_max,
+            eta=0.2, inner_steps=12, batch_size=2, lam=1e-3,
+            use_kernels=use_kernels,
+        )
+        step = make_outer_iteration(mesh, cfg, feature_axes=("model",))
+        w = jnp.zeros((data.dim,), jnp.float32)
+        for _ in range(2):
+            w, gnorm = step(w, bidx, bval, data.labels, jnp.asarray(samples))
+        results[use_kernels] = np.asarray(w)
+    np.testing.assert_array_equal(results[True], results[False])
+
+
+def test_sharded_driver_metering_matches_simulation_driver():
+    """Satellite: run_fdsvrg_sharded must charge the same §4.5 closed
+    forms — compute terms included — as run_fdsvrg, so the two drivers'
+    modeled times agree for identical shapes.  (The sharded driver used to
+    charge flops=0 for the full-gradient phase.)"""
+    data = make_sparse_classification(
+        dim=512, num_instances=64, nnz_per_instance=8, seed=0
+    )
+    inner, u, outers = 8, 4, 2
+    mesh = jax.make_mesh((1,), ("model",))
+    cfg = FDSVRGShardedConfig(
+        dim=data.dim, num_instances=data.num_instances, nnz_max=data.nnz_max,
+        eta=0.1, inner_steps=inner, batch_size=u, lam=1e-3,
+    )
+    w, history, backend = run_fdsvrg_sharded(
+        data, mesh, cfg, feature_axes=("model",), outer_iters=outers, seed=0
+    )
+    assert backend.modeled_time_s > 0.0
+
+    sim_backend = SimBackend(backend.q)
+    sim_cfg = SVRGConfig(eta=0.1, inner_steps=inner, outer_iters=outers,
+                         batch_size=u, seed=0)
+    run_fdsvrg(data, balanced(data.dim, backend.q), losses.logistic,
+               losses.l2(1e-3), sim_cfg, backend=sim_backend)
+    assert backend.meter.total_scalars == sim_backend.meter.total_scalars
+    np.testing.assert_allclose(
+        backend.modeled_time_s, sim_backend.modeled_time_s, rtol=1e-12
+    )
+
+
+def test_input_shardings_match_step_arity():
+    mesh = jax.make_mesh((1,), ("model",))
+    shardings = input_shardings(mesh, feature_axes=("model",))
+    assert len(shardings) == 5  # w, block_indices, block_values, labels, samples
 
 
 _SUBPROCESS_PROG = textwrap.dedent(
@@ -94,6 +169,8 @@ _SUBPROCESS_PROG = textwrap.dedent(
     from repro.core import losses
     from repro.core.fdsvrg import SVRGConfig, run_serial_svrg
     from repro.core.fdsvrg_shardmap import FDSVRGShardedConfig, make_outer_iteration
+    from repro.core.partition import balanced
+    from repro.data.block_csr import BlockCSR
     from repro.data.synthetic import make_sparse_classification
 
     assert jax.device_count() == 8
@@ -104,22 +181,26 @@ _SUBPROCESS_PROG = textwrap.dedent(
                               nnz_max=data.nnz_max, eta=eta, inner_steps=inner,
                               batch_size=u, lam=lam, tree_mode="{mode}")
     step = make_outer_iteration(mesh, cfg, feature_axes=("model",))
+    bidx, bval = BlockCSR.from_padded(data, balanced(data.dim, 8)).stacked()
     rng = np.random.default_rng(3)
     w = jnp.zeros((data.dim,), jnp.float32)
     all_samples = []
     for t in range(outers):
         s = rng.integers(0, data.num_instances, size=(inner, u)).astype(np.int32)
         all_samples.append(s)
-        w, gnorm = step(w, data.indices, data.values, data.labels, jnp.asarray(s))
+        w, gnorm = step(w, bidx, bval, data.labels, jnp.asarray(s))
 
     # serial reference with the same sample stream
-    from repro.core.fdsvrg import _inner_epoch, full_gradient
+    from repro.core.fdsvrg import _full_grad_blocks, _inner_epoch
+    block = BlockCSR.from_padded(data, balanced(data.dim, 1))
     w_ref = jnp.zeros((data.dim,), jnp.float32)
     for t in range(outers):
-        z, s0 = full_gradient(data, w_ref, losses.logistic)
-        w_ref = _inner_epoch(data.indices, data.values, data.labels, w_ref, z, s0,
-                             jnp.asarray(all_samples[t]), eta, lam,
-                             jnp.ones(inner, jnp.float32), "logistic", "l2", 1, None)
+        z, s0 = _full_grad_blocks(block.indices, block.values, data.labels, w_ref,
+                                  "logistic", block.block_dims, False)
+        w_ref = _inner_epoch(block.indices, block.values, data.labels, w_ref, z, s0,
+                             jnp.asarray(all_samples[t]), eta,
+                             jnp.ones(inner, jnp.float32),
+                             "logistic", "l2", lam, block.block_dims, False)
     np.testing.assert_allclose(np.asarray(w), np.asarray(w_ref), rtol=3e-4, atol=3e-6)
     print("OK-8DEV")
     """

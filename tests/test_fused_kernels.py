@@ -1,0 +1,167 @@
+"""The two fused FD-SVRG hot-path kernels (interpret=True on CPU) vs the
+pure-jnp oracles in kernels/ref.py, swept over shapes and tilings.
+
+Bit-identity is part of the contract: inside a jit, the interpret-mode
+kernels must reproduce the reference expression tree exactly — that is
+what makes ``use_kernels=True`` produce bit-identical iterates (asserted
+end-to-end in test_fdsvrg_core.py / test_fdsvrg_shardmap.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+try:
+    import hypothesis  # noqa: F401  (dev-only dep; see requirements-dev.txt)
+
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+
+RNG = np.random.default_rng(0)
+
+
+def _case(d, n, nnz, seed=0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=d).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, d, size=(n, nnz)).astype(np.int32))
+    val = jnp.asarray(rng.normal(size=(n, nnz)).astype(np.float32))
+    return w, idx, val
+
+
+# ---------------------------------------------------------------------------
+# sparse_margin
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "d,n,nnz", [(64, 8, 4), (300, 37, 9), (1024, 128, 16), (50, 1, 1)]
+)
+def test_sparse_margin_matches_ref_bitwise(d, n, nnz):
+    w, idx, val = _case(d, n, nnz, seed=d)
+    got = ops.sparse_margins(idx, val, w, interpret=True)
+    want = jax.jit(ref.sparse_margin_ref)(w, idx, val)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("block_rows", [1, 4, 8, 16])
+def test_sparse_margin_row_tiling_sweep(block_rows):
+    w, idx, val = _case(200, 23, 7, seed=1)  # 23 rows: exercises padding
+    got = ops.sparse_margins(idx, val, w, block_rows=block_rows, interpret=True)
+    want = jax.jit(ref.sparse_margin_ref)(w, idx, val)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_sparse_margin_zero_value_padding_is_inert():
+    """(idx 0, val 0) padding — BlockCSR's convention — contributes 0."""
+    w = jnp.asarray(RNG.normal(size=10).astype(np.float32))
+    idx = jnp.asarray([[3, 0, 0], [7, 2, 0]], jnp.int32)
+    val = jnp.asarray([[2.0, 0.0, 0.0], [1.0, 1.0, 0.0]], jnp.float32)
+    got = ops.sparse_margins(idx, val, w, interpret=True)
+    want = jnp.asarray([2.0 * w[3], w[7] + w[2]])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused_update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,u,nnz", [(64, 1, 4), (300, 5, 9), (1024, 16, 8)])
+@pytest.mark.parametrize("eta,lam", [(0.1, 1e-4), (0.5, 0.0), (0.01, 1e-2)])
+def test_fused_update_matches_ref_bitwise(d, u, nnz, eta, lam):
+    w, idx, val = _case(d, u, nnz, seed=d + u)
+    coef = jnp.asarray(RNG.normal(size=u).astype(np.float32))
+    z = jnp.asarray(RNG.normal(size=d).astype(np.float32))
+    eta_arr = jnp.float32(eta)
+    got = ops.fused_block_update(
+        w, idx, val, coef, z, eta_arr, lam=lam, interpret=True
+    )
+    want = jax.jit(ref.fused_update_ref, static_argnames=("lam",))(
+        w, idx, val, coef, z, eta_arr, lam=lam
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_update_masked_step_is_identity():
+    """eta * mask = 0 (Option II tail) must return w unchanged."""
+    w, idx, val = _case(100, 3, 5, seed=9)
+    coef = jnp.asarray(RNG.normal(size=3).astype(np.float32))
+    z = jnp.asarray(RNG.normal(size=100).astype(np.float32))
+    got = ops.fused_block_update(
+        w, idx, val, coef, z, jnp.float32(0.0), lam=1e-3, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(w))
+
+
+def test_fused_update_collapses_three_passes():
+    """The fusion target: scatter pass + add pass + axpy pass == kernel."""
+    w, idx, val = _case(256, 4, 6, seed=2)
+    coef = jnp.asarray(RNG.normal(size=4).astype(np.float32))
+    z = jnp.asarray(RNG.normal(size=256).astype(np.float32))
+    eta, lam = 0.2, 1e-3
+
+    @jax.jit
+    def three_pass(w, idx, val, coef, z):
+        from repro.data.block_csr import local_scatter
+
+        g = local_scatter(idx, val, coef, w.shape[0])  # pass 1: densify
+        g = g + z + lam * w  # pass 2: combine
+        return w - eta * g  # pass 3: axpy
+
+    got = ops.fused_block_update(
+        w, idx, val, coef, z, jnp.float32(eta), lam=lam, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(three_pass(w, idx, val, coef, z)),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (CI; dev-only dep)
+# ---------------------------------------------------------------------------
+
+
+if HAS_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        st.integers(min_value=1, max_value=200),
+        st.integers(min_value=1, max_value=12),
+        st.integers(min_value=1, max_value=10),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_property_sparse_margin_interpret_equivalence(d, n, nnz):
+        w, idx, val = _case(d, n, nnz, seed=d * 31 + n)
+        got = ops.sparse_margins(idx, val, w, interpret=True)
+        want = jax.jit(ref.sparse_margin_ref)(w, idx, val)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(
+        st.integers(min_value=1, max_value=200),
+        st.integers(min_value=1, max_value=8),
+        st.floats(min_value=1e-4, max_value=1.0),
+        st.floats(min_value=0.0, max_value=0.1),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_property_fused_update_interpret_equivalence(d, u, eta, lam):
+        rng = np.random.default_rng(d * 7 + u)
+        w, idx, val = _case(d, u, 5, seed=d + u)
+        coef = jnp.asarray(rng.normal(size=u).astype(np.float32))
+        z = jnp.asarray(rng.normal(size=d).astype(np.float32))
+        got = ops.fused_block_update(
+            w, idx, val, coef, z, jnp.float32(eta), lam=float(lam),
+            interpret=True,
+        )
+        want = jax.jit(ref.fused_update_ref, static_argnames=("lam",))(
+            w, idx, val, coef, z, jnp.float32(eta), lam=float(lam)
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -8,7 +8,8 @@ pytest.importorskip("hypothesis")  # dev-only dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import losses
-from repro.data.sparse import margins, margins_block, scatter_grad
+from repro.data.block_csr import BlockCSR, local_margins
+from repro.data.sparse import margins, scatter_grad
 from repro.data.synthetic import make_sparse_classification
 
 
@@ -53,10 +54,11 @@ def test_margin_block_decomposition(q, seed):
     from repro.core.partition import balanced
 
     part = balanced(data.dim, q)
+    block_data = BlockCSR.from_padded(data, part)
     total = jnp.zeros_like(full)
     for l in range(q):
         lo, hi = part.block(l)
-        total = total + margins_block(data.indices, data.values, w[lo:hi], lo)
+        total = total + local_margins(*block_data.block(l), w[lo:hi])
     np.testing.assert_allclose(np.asarray(total), np.asarray(full), rtol=2e-4, atol=1e-5)
 
 
