@@ -158,13 +158,27 @@ def run_method(
     q: int,
     lam: float,
     *,
+    reg: losses.Regularizer | None = None,
     eta: float | None = None,
     outer_iters: int = 6,
     batch_size: int | None = None,
     seed: int = 0,
 ) -> RunResult:
-    """One named method on one data set with the paper's M conventions."""
-    reg = losses.l2(lam)
+    """One named method on one data set with the paper's M conventions.
+
+    ``reg`` overrides the default L2(lam) regularizer — pass
+    ``losses.l1(...)`` / ``losses.elastic_net(...)`` for the proximal
+    variants (every method runs the same prox update family, so Fig-6/7
+    comparisons stay like-for-like).  ``lam`` stays the headline strength
+    either way, so a mismatched override fails loudly instead of silently
+    running at a different lambda than the caller reports."""
+    if reg is None:
+        reg = losses.l2(lam)
+    elif reg.lam != lam:
+        raise ValueError(
+            f"reg.lam={reg.lam!r} disagrees with lam={lam!r}; pass the same "
+            "strength in both (lam is what sweeps record/report)"
+        )
     n = data.num_instances
     eta = ETA[method] if eta is None else eta
     if method == "fdsvrg":

@@ -68,6 +68,16 @@ def _blockcsr_update_fused_jnp(indices, values, coef, w_block, z_block, eta, lam
     return w_block - eta * (g + z_block + lam * w_block)
 
 
+def _blockcsr_prox_update_jnp(indices, values, coef, w_block, z_block, eta,
+                              lam1, lam2):
+    """Unfused reference for the prox path: scatter, combine, axpy, then
+    the two prox sweeps (threshold + shrink) — five passes over d/q."""
+    g = local_scatter(indices, values, coef, w_block.shape[0])
+    v = w_block - eta * (g + z_block)
+    v = jnp.sign(v) * jnp.maximum(jnp.abs(v) - eta * lam1, 0.0)
+    return v / (1.0 + eta * lam2)
+
+
 def bench_blockcsr(quick: bool) -> tuple[list[list], dict]:
     """Per-worker hot-path timings: masked global rows vs block-local rows.
 
@@ -184,6 +194,32 @@ def bench_blockcsr(quick: bool) -> tuple[list[list], dict]:
         "blockcsr_kernel_interpret_us": t_kernel,
         "hot_path_speedup_vs_masked": t_masked / t_local,
         "kernel_interpret_overhead_x": t_kernel / t_local,
+    }
+
+    # --- prox-fused update (FD-Prox-SVRG inner step: scatter + VR update
+    # + soft-threshold + elastic-net shrink in ONE pass) ---
+    lam1, lam2 = 1e-3, 1e-4
+    t_unfused = _timeit(
+        jax.jit(lambda i, v, c, w, z: _blockcsr_prox_update_jnp(
+            i, v, c, w, z, eta, lam1, lam2)),
+        bidx_u, bval_u, coef, w_blk, z_blk, iters=iters,
+    )
+    t_kernel = _timeit(
+        lambda i, v, c, w, z: ops.fused_block_prox_update(
+            w, i, v, c, z, jnp.float32(eta), lam=0.0, lam1=lam1, lam2=lam2,
+            interpret=True),
+        bidx_u, bval_u, coef, w_blk, z_blk, iters=iters,
+    )
+    rows += [
+        [f"prox_update_blockcsr_jnp_q{q}", f"{t_unfused:.1f}",
+         f"[u={u},d/q={block_dim},elastic_net]"],
+        [f"prox_update_blockcsr_kernel_q{q}", f"{t_kernel:.1f}",
+         "pallas interpret=True"],
+    ]
+    summary["prox_update"] = {
+        "blockcsr_us": t_unfused,
+        "blockcsr_kernel_interpret_us": t_kernel,
+        "kernel_interpret_overhead_x": t_kernel / t_unfused,
     }
     return rows, summary
 

@@ -1,14 +1,38 @@
-"""Figure 8: webspam convergence for lambda in {1e-3, 1e-5} — FD-SVRG must
-stay fastest under both regularization strengths."""
+"""Figure 8 + the FD-Prox-SVRG sparsity sweep.
+
+* :func:`run` — Figure 8: webspam convergence for lambda in {1e-3, 1e-5};
+  FD-SVRG must stay fastest under both regularization strengths.
+* :func:`run_prox` — sparsity-vs-lambda for the proximal family (paper
+  eq. 3: L1 / elastic-net decompose over feature blocks, so the prox step
+  is block-local and communication-free): for each lambda, run
+  FD-Prox-SVRG and record nnz(w)/d and the objective, plus the L2 run at
+  the same lambda to certify comm-scalar parity.  Emits
+  ``results/benchmarks/BENCH_prox.json``.
+
+Standalone entry point with a ``--quick`` smoke mode for CI:
+
+    PYTHONPATH=src python -m benchmarks.lambda_sensitivity [--quick]
+
+``--quick`` runs only the prox sweep on the scaled news20 preset.
+"""
 
 from __future__ import annotations
 
+import argparse
+import time
+
+import numpy as np
+
 from benchmarks.common import (
+    ETA,
     analytic_schedule,
     best_objective,
+    lam_equiv,
     run_method,
+    write_bench_json,
     write_csv,
 )
+from repro.core import losses
 from repro.data import datasets
 
 
@@ -42,9 +66,88 @@ def run(outer_iters: int = 6):
     return path, rows
 
 
+def run_prox(quick: bool = False):
+    """Sparsity-vs-lambda sweep; returns (csv_path, rows, payload)."""
+    name = "news20" if quick else "webspam"
+    data = datasets.load(name)
+    q = datasets.spec(name).default_workers
+    outer_iters = 3 if quick else 6
+    base = lam_equiv(name)
+    factors = (0.05, 0.5, 5.0) if quick else (0.01, 0.05, 0.5, 5.0, 50.0)
+
+    rows: list[list] = []
+    report: list[dict] = []
+    parity = True
+    # One L2 control for the whole sweep: the meter is charged from shapes
+    # (n, d, q, M, outers) only, so its totals are independent of reg and
+    # lambda — a single run certifies comm parity for every sweep point.
+    l2 = run_method("fdsvrg", data, q, base, outer_iters=outer_iters)
+    for factor in factors:
+        lam = base * factor
+        runs = {
+            "l1": run_method(
+                "fdsvrg", data, q, lam,
+                reg=losses.l1(lam), outer_iters=outer_iters,
+            ),
+            "elastic_net": run_method(
+                "fdsvrg", data, q, lam,
+                reg=losses.elastic_net(lam, base), outer_iters=outer_iters,
+            ),
+        }
+        for reg_name, res in runs.items():
+            w = np.asarray(res.w)
+            nnz = int(np.count_nonzero(w))
+            parity &= res.meter.total_scalars == l2.meter.total_scalars
+            entry = {
+                "reg": reg_name,
+                "lambda": lam,
+                "lambda2": base if reg_name == "elastic_net" else 0.0,
+                "objective": res.final_objective(),
+                "grad_mapping_norm": res.history[-1].grad_norm,
+                "nnz": nnz,
+                "nnz_frac": nnz / data.dim,
+                "comm_scalars": res.meter.total_scalars,
+                "comm_scalars_l2": l2.meter.total_scalars,
+            }
+            report.append(entry)
+            rows.append([
+                reg_name, f"{lam:g}", f"{entry['objective']:.6e}",
+                nnz, f"{entry['nnz_frac']:.4f}", entry["comm_scalars"],
+            ])
+    payload = {
+        "quick": quick,
+        "dataset": name,
+        "dim": data.dim,
+        "workers": q,
+        "eta": ETA["fdsvrg"],
+        "outer_iters": outer_iters,
+        "comm_parity_with_l2": parity,
+        "sweep": report,
+    }
+    path = write_csv(
+        "prox_sparsity.csv",
+        ["reg", "lambda", "objective", "nnz", "nnz_frac", "comm_scalars"],
+        rows,
+    )
+    return path, rows, payload
+
+
 def main():
-    path, rows = run()
-    print(f"lambda_sensitivity: wrote {len(rows)} rows to {path}")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="prox sweep only, small preset (CI smoke mode)")
+    args = ap.parse_args()
+    if not args.quick:
+        path, rows = run()
+        print(f"lambda_sensitivity: wrote {len(rows)} rows to {path}")
+    t0 = time.perf_counter()
+    path, rows, payload = run_prox(quick=args.quick)
+    payload["wall_us"] = (time.perf_counter() - t0) * 1e6
+    write_bench_json("prox", payload)
+    print(f"prox_sparsity: wrote {len(rows)} rows to {path} "
+          f"(comm parity with L2: {payload['comm_parity_with_l2']})")
+    for r in rows:
+        print("  ", ",".join(map(str, r)))
 
 
 if __name__ == "__main__":

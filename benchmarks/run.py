@@ -66,6 +66,13 @@ def main() -> None:
     write_bench_json("lambda_sensitivity", {"wall_us": us, "rows": len(rows)})
 
     t = time.perf_counter()
+    _, rows, payload = lambda_sensitivity.run_prox(quick=args.quick)
+    us = stamp("prox_sparsity_sweep", t,
+               f"{len(rows)} rows;comm_parity={payload['comm_parity_with_l2']}")
+    payload["wall_us"] = us
+    write_bench_json("prox", payload)
+
+    t = time.perf_counter()
     _, rows, times, measured = scalability.run()
     us = stamp("fig9_scalability", t,
                ";".join(f"q{q}={times[1]/times[q]:.2f}x" for q in (1, 4, 8, 16)))

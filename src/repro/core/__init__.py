@@ -7,6 +7,7 @@ from repro.core.fdsvrg import (
     SVRGConfig,
     full_gradient,
     objective,
+    optimality_norm,
     run_fdsvrg,
     run_serial_svrg,
     fdsvrg_worker_simulation,
@@ -22,6 +23,7 @@ __all__ = [
     "SVRGConfig",
     "full_gradient",
     "objective",
+    "optimality_norm",
     "run_fdsvrg",
     "run_serial_svrg",
     "fdsvrg_worker_simulation",

@@ -40,9 +40,10 @@ from repro.core.fdsvrg import (
     _inner_epoch,
     _option_mask,
     full_gradient,
-    objective,
+    objective_from_margins,
+    optimality_norm,
 )
-from repro.data.sparse import PaddedCSR, scatter_grad
+from repro.data.sparse import PaddedCSR
 from repro.dist import ClusterModel, Collectives, SimBackend
 
 
@@ -79,8 +80,10 @@ def run_dsvrg(
     m_local = cfg.inner_steps  # paper: M = local instance count = N/q
     t_start = time.perf_counter()
 
+    # Snapshot gradient for outer 0; each post-epoch gradient below doubles
+    # as the next snapshot, so grad_norm pairs z and w at the same iterate.
+    z_data, s0 = full_gradient(data, w, loss)
     for t in range(cfg.outer_iters):
-        z_data, s0 = full_gradient(data, w, loss)
         # center -> q machines: w (d each); machines -> center: grad (d each)
         backend.p2p(2 * q * d, "dsvrg_fullgrad", rounds=2)
         backend.charge(
@@ -100,6 +103,7 @@ def run_dsvrg(
             w, z_data, s0,
             jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
             loss.name, reg.name, reg.lam, (data.dim,), False,
+            lam2=reg.lam2,
         )
         # center -> J: full gradient (d); J -> center: parameter (d)
         backend.p2p(2 * d, "dsvrg_handoff", rounds=2)
@@ -109,8 +113,9 @@ def run_dsvrg(
             rounds=2,
         )
 
-        obj = objective(data, w, loss, reg)
-        gnorm = float(jnp.linalg.norm(z_data + reg.grad(w)))
+        z_data, s0 = full_gradient(data, w, loss)
+        obj = objective_from_margins(s0, data.labels, w, loss, reg)
+        gnorm = optimality_norm(z_data, w, reg, cfg.eta)
         history.append(
             OuterRecord(t, obj, gnorm, backend.meter.total_scalars,
                         backend.meter.total_rounds, backend.modeled_time_s,
@@ -140,8 +145,10 @@ def run_syn_svrg(
     history: list[OuterRecord] = []
     t_start = time.perf_counter()
 
+    # Snapshot gradient for outer 0; see run_dsvrg for the rotation that
+    # keeps grad_norm a same-iterate quantity.
+    z_data, s0 = full_gradient(data, w, loss)
     for t in range(cfg.outer_iters):
-        z_data, s0 = full_gradient(data, w, loss)
         backend.p2p(2 * q * d, "ps_fullgrad", rounds=2)
         backend.charge(
             flops=4.0 * (n / q) * nnz,
@@ -157,6 +164,7 @@ def run_syn_svrg(
             w, z_data, s0,
             jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
             loss.name, reg.name, reg.lam, (data.dim,), False,
+            lam2=reg.lam2,
         )
         # per step: q workers pull dense w (q*d), push sparse VR grads
         # (2*nnz keys+values each) -- the <key,value> concession.
@@ -172,8 +180,9 @@ def run_syn_svrg(
             )
         )
 
-        obj = objective(data, w, loss, reg)
-        gnorm = float(jnp.linalg.norm(z_data + reg.grad(w)))
+        z_data, s0 = full_gradient(data, w, loss)
+        obj = objective_from_margins(s0, data.labels, w, loss, reg)
+        gnorm = optimality_norm(z_data, w, reg, cfg.eta)
         history.append(
             OuterRecord(t, obj, gnorm, backend.meter.total_scalars,
                         backend.meter.total_rounds, backend.modeled_time_s,
@@ -187,8 +196,14 @@ def run_syn_svrg(
 # ---------------------------------------------------------------------------
 
 
+# lam stays traced (it only enters jnp arithmetic) so lambda sweeps reuse
+# one compiled inner loop; lam2 is Python-branched in Regularizer.prox and
+# must be static.
 @functools.partial(
-    jax.jit, static_argnames=("loss_name", "reg_name", "delay_buf", "variance_reduced")
+    jax.jit,
+    static_argnames=(
+        "loss_name", "reg_name", "delay_buf", "variance_reduced", "lam2"
+    ),
 )
 def _async_epoch(
     indices, values, labels,
@@ -199,15 +214,19 @@ def _async_epoch(
     loss_name: str, reg_name: str,
     delay_buf: int,
     variance_reduced: bool,
+    lam2: float = 0.0,
 ):
     """Asynchronous PS inner loop with a bounded-staleness ring buffer.
 
     Step m computes its gradient at the iterate that was current ``delays[m]``
     server updates ago (Alg 5/6: workers pull, compute, push while the
-    server keeps moving).
+    server keeps moving).  The server applies the proximal update — the
+    prox acts on the fresh server iterate, the smooth gradient is
+    evaluated at the stale pull — so the PS baselines run the same
+    regularizer family as FD-Prox-SVRG for like-for-like comparisons.
     """
     loss = losses_lib.LOSSES[loss_name]
-    reg = losses_lib.Regularizer(reg_name, lam)
+    reg = losses_lib.Regularizer(reg_name, lam, lam2)
     d = w0.shape[0]
     buf = jnp.broadcast_to(w0, (delay_buf, d))
 
@@ -223,12 +242,11 @@ def _async_epoch(
         if variance_reduced:
             coef = loss.dvalue(s_m, y) - loss.dvalue(s0[i_m], y)
             g = coef * jnp.zeros((d,), values.dtype).at[idx].add(val) + z_data
-            g = g + reg.grad(w_stale)
         else:
             coef = loss.dvalue(s_m, y)
             g = coef * jnp.zeros((d,), values.dtype).at[idx].add(val)
-            g = g + reg.grad(w_stale)
-        w_next = w_now - eta * g
+        g = g + reg.smooth_grad(w_stale)
+        w_next = reg.prox(w_now - eta * g, eta)
         buf = buf.at[(ptr + 1) % delay_buf].set(w_next)
         return (buf, ptr + 1), None
 
@@ -264,8 +282,13 @@ def _run_async(
                 rounds=2,
             )
         else:
-            z_data = jnp.zeros((d,), jnp.float32)
-            _, s0 = full_gradient(data, w, loss)  # s0 unused; cheap
+            # No variance reduction: z is identically zero (in the data's
+            # dtype, so float64 runs don't silently promote), and s0 is
+            # dead in this jit specialization (_async_epoch reads it only
+            # under variance_reduced=True) — zeros keep the call signature
+            # without paying O(N·nnz) per outer for a discarded gradient.
+            z_data = jnp.zeros((d,), data.values.dtype)
+            s0 = jnp.zeros((n,), data.values.dtype)
 
         samples = rng.integers(0, n, size=cfg.inner_steps).astype(np.int32)
         delays = rng.integers(0, q, size=cfg.inner_steps).astype(np.int32)
@@ -274,6 +297,7 @@ def _run_async(
             w, z_data, s0,
             jnp.asarray(samples), jnp.asarray(delays),
             cfg.eta, reg.lam, loss.name, reg.name, delay_buf, variance_reduced,
+            lam2=reg.lam2,
         )
         # per async step: one worker pulls dense w (d) and pushes a sparse
         # (VR-)gradient (2*nnz) -- but the reg term makes pushes dense in
@@ -290,9 +314,9 @@ def _run_async(
             )
         )
 
-        obj = objective(data, w, loss, reg)
-        gd, _ = full_gradient(data, w, loss)
-        gnorm = float(jnp.linalg.norm(gd + reg.grad(w)))
+        gd, s_post = full_gradient(data, w, loss)
+        obj = objective_from_margins(s_post, data.labels, w, loss, reg)
+        gnorm = optimality_norm(gd, w, reg, cfg.eta)
         history.append(
             OuterRecord(t, obj, gnorm, backend.meter.total_scalars,
                         backend.meter.total_rounds, backend.modeled_time_s,

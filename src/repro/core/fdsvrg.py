@@ -20,9 +20,12 @@ its own block's entries with local ids, so per-worker gather/scatter work
 is O(nnz_max/q) — no membership masks anywhere on the hot path.  Every
 implementation takes ``use_kernels``: ``True`` routes the two hot paths
 through the fused Pallas kernels (:func:`repro.kernels.ops.sparse_margins`
-and :func:`repro.kernels.ops.fused_block_update`, interpret-mode on CPU),
-``False`` is the pure-jnp numerics oracle.  The two paths are
-bit-identical in interpret mode (asserted in tests).
+and :func:`repro.kernels.ops.fused_block_prox_update`, interpret-mode on
+CPU), ``False`` is the pure-jnp numerics oracle.  The two paths are
+bit-identical in interpret mode (asserted in tests), for every
+regularizer: l2, l1, elastic_net, and none (the inner step is the
+Prox-SVRG update, which specializes to classic SVRG when the prox is the
+identity).
 
 All communication — executed or modeled — goes through a
 :class:`repro.dist.Collectives` backend, so FD-SVRG and the baselines in
@@ -96,9 +99,9 @@ class RunResult:
 
 
 @functools.partial(jax.jit, static_argnames=("loss_name", "reg_name"))
-def _objective_impl(indices, values, labels, w, lam, loss_name, reg_name):
+def _objective_impl(indices, values, labels, w, lam, lam2, loss_name, reg_name):
     loss = losses_lib.LOSSES[loss_name]
-    reg = losses_lib.Regularizer(reg_name, lam)
+    reg = losses_lib.Regularizer(reg_name, lam, lam2)
     s = margins_rows(indices, values, w)
     return jnp.mean(loss.value(s, labels)) + reg.value(w)
 
@@ -108,7 +111,32 @@ def objective(
 ) -> float:
     return float(
         _objective_impl(
-            data.indices, data.values, data.labels, w, reg.lam, loss.name, reg.name
+            data.indices, data.values, data.labels, w, reg.lam, reg.lam2,
+            loss.name, reg.name,
+        )
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name"))
+def _objective_from_margins_impl(s, labels, w, lam, lam2, loss_name, reg_name):
+    loss = losses_lib.LOSSES[loss_name]
+    reg = losses_lib.Regularizer(reg_name, lam, lam2)
+    return jnp.mean(loss.value(s, labels)) + reg.value(w)
+
+
+def objective_from_margins(
+    s: jax.Array,
+    labels: jax.Array,
+    w: jax.Array,
+    loss: losses_lib.MarginLoss,
+    reg: losses_lib.Regularizer,
+) -> float:
+    """Objective at ``w`` given the margins ``s = w^T x_i`` already in hand
+    (the drivers' post-epoch full gradient computes them anyway — no point
+    paying a second O(N·nnz) sweep just to report f(w))."""
+    return float(
+        _objective_from_margins_impl(
+            s, labels, w, reg.lam, reg.lam2, loss.name, reg.name
         )
     )
 
@@ -129,6 +157,28 @@ def full_gradient(
     return _full_grad_impl(data.indices, data.values, data.labels, w, loss.name)
 
 
+def optimality_norm(
+    z_data: jax.Array,
+    w: jax.Array,
+    reg: losses_lib.Regularizer,
+    eta: float,
+) -> float:
+    """First-order optimality residual at ``w``, given the data gradient
+    ``z_data = (1/N) sum_i phi'(w^T x_i, y_i) x_i`` computed **at the same
+    w** (not a stale snapshot).
+
+    Smooth g: the plain gradient norm ``||z_data + grad g(w)||``.
+    Nonsmooth g (l1 / elastic_net): the prox gradient-mapping norm
+    ``||(w - prox_{eta*g}(w - eta * grad f(w))) / eta||`` — the standard
+    composite-optimality measure, which specializes to the gradient norm
+    when the prox is the identity.  Both vanish exactly at a minimizer.
+    """
+    if reg.is_smooth:
+        return float(jnp.linalg.norm(z_data + reg.grad(w)))
+    v = reg.prox(w - eta * (z_data + reg.smooth_grad(w)), eta)
+    return float(jnp.linalg.norm((w - v) / eta))
+
+
 # ---------------------------------------------------------------------------
 # Block-local hot paths (shared by every implementation)
 # ---------------------------------------------------------------------------
@@ -139,17 +189,6 @@ def _bounds(block_dims: tuple[int, ...]) -> tuple[int, ...]:
     for d in block_dims:
         b.append(b[-1] + d)
     return tuple(b)
-
-
-def _kernel_lam(reg_name: str, lam: float) -> float:
-    """The L2-family lam the fused update kernel folds in (0 for 'none')."""
-    if reg_name == "l2":
-        return float(lam)
-    if reg_name == "none":
-        return 0.0
-    raise ValueError(
-        f"use_kernels=True supports the L2 regularizer family, got {reg_name!r}"
-    )
 
 
 def _block_margins(idx, val, w_block, use_kernels: bool):
@@ -197,7 +236,9 @@ def _full_grad_blocks(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("loss_name", "reg_name", "lam", "block_dims", "use_kernels"),
+    static_argnames=(
+        "loss_name", "reg_name", "lam", "block_dims", "use_kernels", "lam2"
+    ),
 )
 def _inner_epoch(
     block_indices,  # per-block int32[N, nnz_l], LOCAL ids
@@ -214,22 +255,27 @@ def _inner_epoch(
     lam: float,
     block_dims: tuple[int, ...],
     use_kernels: bool,
+    lam2: float = 0.0,  # elastic-net L2 strength (trailing: legacy call sites)
 ):
-    """M variance-reduced updates on the block-local layout.
+    """M proximal variance-reduced updates on the block-local layout.
 
     The margin of each sampled instance is computed the
     feature-distributed way: q per-block partial dots (local gathers, no
     masks) summed in block order (matching the tree reduce), certifying
-    the decomposition the paper relies on.  ``len(block_dims) == 1`` is
+    the decomposition the paper relies on.  The update is the Prox-SVRG
+    step ``w <- prox_{eta*g}(w - eta * (grad_vr + z + smooth_grad g))``;
+    for the smooth family the prox is the identity and this is exactly
+    the classic SVRG step, bit-for-bit.  The prox is elementwise (paper
+    eq. 3: g decomposes over blocks), hence purely block-local — no extra
+    communication relative to the L2 path.  ``len(block_dims) == 1`` is
     the serial path.  ``use_kernels`` swaps the gather-margin and the
-    scatter+update for the fused Pallas kernels.
+    scatter+prox-update for the fused Pallas kernels.
     """
     loss = losses_lib.LOSSES[loss_name]
-    reg = losses_lib.Regularizer(reg_name, lam)
+    reg = losses_lib.Regularizer(reg_name, lam, lam2)
     u = samples.shape[1]
     q = len(block_dims)
     bounds = _bounds(block_dims)
-    kernel_lam = _kernel_lam(reg_name, lam) if use_kernels else 0.0
 
     def step(w, inp):
         ids, mask = inp  # ids: int32[u]
@@ -257,14 +303,15 @@ def _inner_epoch(
             z_blk = jax.lax.slice_in_dim(z_data, bounds[l], bounds[l + 1])
             if use_kernels:
                 new_blocks.append(
-                    ops.fused_block_update(
-                        w_blk, idx, val, coef, z_blk, eta_m, lam=kernel_lam
+                    ops.fused_block_prox_update(
+                        w_blk, idx, val, coef, z_blk, eta_m,
+                        lam=reg.smooth_lam, lam1=reg.prox_l1, lam2=reg.prox_l2,
                     )
                 )
             else:
                 g = local_scatter(idx, val, coef, block_dims[l])
-                g = g + z_blk + reg.grad(w_blk)
-                new_blocks.append(w_blk - eta_m * g)
+                g = g + z_blk + reg.smooth_grad(w_blk)
+                new_blocks.append(reg.prox(w_blk - eta_m * g, eta_m))
         w_next = jnp.concatenate(new_blocks) if q > 1 else new_blocks[0]
         return w_next, None
 
@@ -296,8 +343,6 @@ def run_serial_svrg(
     *,
     use_kernels: bool = False,
 ) -> RunResult:
-    if use_kernels:
-        _kernel_lam(reg.name, reg.lam)  # validate up front
     # The q=1 BlockCSR shares the PaddedCSR arrays (local ids == global).
     block_data = BlockCSR.from_padded(data, balanced(data.dim, 1))
     block_dims = block_data.block_dims
@@ -306,11 +351,16 @@ def run_serial_svrg(
     meter = CommMeter()  # serial: stays empty
     history: list[OuterRecord] = []
     t_start = time.perf_counter()
+    # Snapshot gradient for outer 0; thereafter each epoch's post-epoch
+    # gradient doubles as the next snapshot, so grad_norm is reported at
+    # the *post-epoch* iterate at the cost of one extra full gradient for
+    # the whole run (the historical code paired the snapshot z with the
+    # post-epoch w — a mixed-iterate quantity).
+    z_data, s0 = _full_grad_blocks(
+        block_data.indices, block_data.values, data.labels, w,
+        loss.name, block_dims, use_kernels,
+    )
     for t in range(cfg.outer_iters):
-        z_data, s0 = _full_grad_blocks(
-            block_data.indices, block_data.values, data.labels, w,
-            loss.name, block_dims, use_kernels,
-        )
         samples = _draw_samples(rng, data.num_instances, cfg.inner_steps, cfg.batch_size)
         mask = _option_mask(rng, cfg.inner_steps, cfg.option)
         w = _inner_epoch(
@@ -328,9 +378,14 @@ def run_serial_svrg(
             reg.lam,
             block_dims,
             use_kernels,
+            lam2=reg.lam2,
         )
-        obj = objective(data, w, loss, reg)
-        gnorm = float(jnp.linalg.norm(z_data + reg.grad(w)))
+        z_data, s0 = _full_grad_blocks(
+            block_data.indices, block_data.values, data.labels, w,
+            loss.name, block_dims, use_kernels,
+        )
+        obj = objective_from_margins(s0, data.labels, w, loss, reg)
+        gnorm = optimality_norm(z_data, w, reg, cfg.eta)
         history.append(
             OuterRecord(t, obj, gnorm, 0, 0, 0.0, time.perf_counter() - t_start)
         )
@@ -375,8 +430,6 @@ def run_fdsvrg(
             f"backend has q={backend.q} workers but the partition has "
             f"{q} blocks"
         )
-    if use_kernels:
-        _kernel_lam(reg.name, reg.lam)
     if block_data is None:
         block_data = BlockCSR.from_padded(data, partition)
     elif block_data.partition.bounds != partition.bounds:
@@ -390,12 +443,16 @@ def run_fdsvrg(
     log_rounds = backend.tree_rounds
     t_start = time.perf_counter()
 
+    # Snapshot gradient for outer 0; each epoch's post-epoch gradient below
+    # doubles as the next snapshot, so grad_norm is reported at the
+    # post-epoch iterate with only one extra full gradient for the run.
+    z_data, s0 = _full_grad_blocks(
+        block_data.indices, block_data.values, data.labels, w,
+        loss.name, block_dims, use_kernels,
+    )
     for t in range(cfg.outer_iters):
-        # --- full-gradient phase (Alg 1 lines 3-5) ---
-        z_data, s0 = _full_grad_blocks(
-            block_data.indices, block_data.values, data.labels, w,
-            loss.name, block_dims, use_kernels,
-        )
+        # --- full-gradient phase (Alg 1 lines 3-5): account the snapshot
+        # gradient this outer iteration consumes ---
         backend.meter_tree(payload=n)  # w_t^T D summed across blocks
         # per-worker compute: margins over the local block (N*nnz/q flops-ish)
         # + local scatter of the full gradient.
@@ -422,6 +479,7 @@ def run_fdsvrg(
             reg.lam,
             block_dims,
             use_kernels,
+            lam2=reg.lam2,
         )
         # --- inner-loop communication (Alg 1 lines 9-11): one tree round
         # per mini-batch of u margins; M steps total (metered in aggregate).
@@ -437,8 +495,14 @@ def run_fdsvrg(
             )
         )
 
-        obj = objective(data, w, loss, reg)
-        gnorm = float(jnp.linalg.norm(z_data + reg.grad(w)))
+        # Post-epoch gradient: next outer's snapshot AND the diagnostic
+        # pair for this record (z, s0, and w at the same iterate).
+        z_data, s0 = _full_grad_blocks(
+            block_data.indices, block_data.values, data.labels, w,
+            loss.name, block_dims, use_kernels,
+        )
+        obj = objective_from_margins(s0, data.labels, w, loss, reg)
+        gnorm = optimality_norm(z_data, w, reg, cfg.eta)
         history.append(
             OuterRecord(
                 t,
@@ -469,16 +533,22 @@ def _sim_scatter(idx, val, coeffs, block_dim):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("reg_name", "lam", "use_kernels")
+    jax.jit, static_argnames=("reg_name", "lam", "use_kernels", "lam2")
 )
-def _sim_update(w_block, idx, val, coef, z_block, eta_m, reg_name, lam, use_kernels):
+def _sim_update(w_block, idx, val, coef, z_block, eta_m, reg_name, lam,
+                use_kernels, lam2=0.0):
+    reg = losses_lib.Regularizer(reg_name, lam, lam2)
     if use_kernels:
-        return ops.fused_block_update(
-            w_block, idx, val, coef, z_block, eta_m, lam=_kernel_lam(reg_name, lam)
+        return ops.fused_block_prox_update(
+            w_block, idx, val, coef, z_block, eta_m,
+            lam=reg.smooth_lam, lam1=reg.prox_l1, lam2=reg.prox_l2,
         )
-    reg = losses_lib.Regularizer(reg_name, lam)
-    g = local_scatter(idx, val, coef, w_block.shape[0]) + z_block + reg.grad(w_block)
-    return w_block - eta_m * g
+    g = (
+        local_scatter(idx, val, coef, w_block.shape[0])
+        + z_block
+        + reg.smooth_grad(w_block)
+    )
+    return reg.prox(w_block - eta_m * g, eta_m)
 
 
 def fdsvrg_worker_simulation(
@@ -502,8 +572,6 @@ def fdsvrg_worker_simulation(
     """
     q = partition.num_blocks
     backend = backend or SimBackend(q)
-    if use_kernels:
-        _kernel_lam(reg.name, reg.lam)
     block_data = BlockCSR.from_padded(data, partition)
     rng = np.random.default_rng(cfg.seed)
     n = data.num_instances
@@ -546,11 +614,12 @@ def fdsvrg_worker_simulation(
             s_a = s0[ids]
             coef = (loss.dvalue(s_m, y) - loss.dvalue(s_a, y)) / cfg.batch_size
             eta_m = jnp.asarray(cfg.eta * float(mask[m]), dtype=blocks[0].dtype)
-            # Line 11: purely local update on each block.
+            # Line 11: purely local prox update on each block (the prox is
+            # elementwise — paper eq. 3 — so no worker needs its peers).
             for l in range(q):
                 blocks[l] = _sim_update(
                     blocks[l], rows[l][0], rows[l][1], coef, z_blocks[l],
-                    eta_m, reg.name, reg.lam, use_kernels,
+                    eta_m, reg.name, reg.lam, use_kernels, lam2=reg.lam2,
                 )
 
     return jnp.concatenate(blocks), backend.meter

@@ -46,11 +46,20 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import losses as losses_lib
-from repro.core.fdsvrg import _kernel_lam
 from repro.core.partition import balanced
 from repro.data.block_csr import BlockCSR, local_margins, local_scatter
 from repro.dist import ClusterModel, ShardMapBackend
 from repro.kernels import ops
+
+
+def _opt_residual_blk(reg, eta, w_blk, z_blk):
+    """Block-local optimality residual: the gradient for smooth g, the
+    prox gradient mapping otherwise (see repro.core.fdsvrg.optimality_norm
+    — this is its per-block body; callers psum the squares)."""
+    if reg.is_smooth:
+        return z_blk + reg.grad(w_blk)
+    v_blk = reg.prox(w_blk - eta * (z_blk + reg.smooth_grad(w_blk)), eta)
+    return (w_blk - v_blk) / eta
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,8 +71,9 @@ class FDSVRGShardedConfig:
     inner_steps: int
     batch_size: int = 16
     loss_name: str = "logistic"
-    reg_name: str = "l2"
+    reg_name: str = "l2"  # "l2" | "l1" | "elastic_net" | "none"
     lam: float = 1e-4
+    lam2: float = 0.0  # elastic-net L2 strength
     tree_mode: str = "psum"  # or "butterfly"
     use_kernels: bool = False
 
@@ -104,8 +114,7 @@ def make_outer_iteration(
         raise ValueError(f"dim {cfg.dim} must divide by q={q} (pad features)")
     block = cfg.dim // q
     loss = losses_lib.LOSSES[cfg.loss_name]
-    reg = losses_lib.Regularizer(cfg.reg_name, cfg.lam)
-    kernel_lam = _kernel_lam(cfg.reg_name, cfg.lam) if cfg.use_kernels else 0.0
+    reg = losses_lib.Regularizer(cfg.reg_name, cfg.lam, cfg.lam2)
     axes = backend.feature_axes
 
     def worker(w_blk, bidx, bval, labels, samples):
@@ -122,11 +131,16 @@ def make_outer_iteration(
         s0 = backend.device_all_reduce(partial_s0)
         coeffs0 = loss.dvalue(s0, labels) / labels.shape[0]
         z_blk = local_scatter(bidx, bval, coeffs0, block)
+        # Optimality residual at the snapshot (z and w at the SAME
+        # iterate — the driver reports the post-epoch value via
+        # make_optimality_eval instead, matching the other drivers).
         gnorm_sq = jax.lax.psum(
-            jnp.sum((z_blk + reg.grad(w_blk)) ** 2), axes
+            jnp.sum(_opt_residual_blk(reg, cfg.eta, w_blk, z_blk) ** 2), axes
         )
 
-        # ---- inner loop: one u-scalar all-reduce per step ----
+        # ---- inner loop: one u-scalar all-reduce per step; the prox is
+        # elementwise on the local block, so the traffic is identical for
+        # every regularizer ----
         def step(w_b, ids):
             idx = bidx[ids]
             val = bval[ids]
@@ -135,12 +149,13 @@ def make_outer_iteration(
             s_m = backend.device_all_reduce(partial)
             coef = (loss.dvalue(s_m, y) - loss.dvalue(s0[ids], y)) / cfg.batch_size
             if cfg.use_kernels:
-                w_next = ops.fused_block_update(
-                    w_b, idx, val, coef, z_blk, cfg.eta, lam=kernel_lam
+                w_next = ops.fused_block_prox_update(
+                    w_b, idx, val, coef, z_blk, cfg.eta,
+                    lam=reg.smooth_lam, lam1=reg.prox_l1, lam2=reg.prox_l2,
                 )
             else:
-                g = local_scatter(idx, val, coef, block) + z_blk + reg.grad(w_b)
-                w_next = w_b - cfg.eta * g
+                g = local_scatter(idx, val, coef, block) + z_blk + reg.smooth_grad(w_b)
+                w_next = reg.prox(w_b - cfg.eta * g, cfg.eta)
             return w_next, None
 
         w_blk, _ = jax.lax.scan(step, w_blk, samples)
@@ -160,6 +175,60 @@ def make_outer_iteration(
         return w_next, jnp.sqrt(gnorm_sq)
 
     return outer_iteration
+
+
+def make_optimality_eval(
+    mesh: Mesh,
+    cfg: FDSVRGShardedConfig,
+    feature_axes: Sequence[str] = ("data", "model"),
+    backend: ShardMapBackend | None = None,
+):
+    """Jittable ``(w, block_indices, block_values, labels) -> gnorm``: the
+    full-gradient phase (one N-vector all-reduce, block-local scatter)
+    without an inner epoch, reduced to the optimality-residual norm at
+    ``w``.  The driver uses it to report ``grad_norm`` at the
+    **post-epoch** iterate — z and w from the same point, like every
+    other driver — for the final history record (earlier records reuse
+    the next outer's snapshot residual), i.e. one extra full-gradient
+    phase per run (a diagnostic; not metered as algorithm traffic)."""
+    if backend is None:
+        backend = ShardMapBackend(
+            mesh=mesh, feature_axes=feature_axes, tree_mode=cfg.tree_mode
+        )
+    q = backend.q
+    if cfg.dim % q != 0:
+        raise ValueError(f"dim {cfg.dim} must divide by q={q} (pad features)")
+    block = cfg.dim // q
+    loss = losses_lib.LOSSES[cfg.loss_name]
+    reg = losses_lib.Regularizer(cfg.reg_name, cfg.lam, cfg.lam2)
+    axes = backend.feature_axes
+
+    def worker(w_blk, bidx, bval, labels):
+        bidx = bidx[0]
+        bval = bval[0]
+        if cfg.use_kernels:
+            partial = ops.sparse_margins(bidx, bval, w_blk)
+        else:
+            partial = local_margins(bidx, bval, w_blk)
+        s = backend.device_all_reduce(partial)
+        coeffs = loss.dvalue(s, labels) / labels.shape[0]
+        z_blk = local_scatter(bidx, bval, coeffs, block)
+        return jax.lax.psum(
+            jnp.sum(_opt_residual_blk(reg, cfg.eta, w_blk, z_blk) ** 2), axes
+        )
+
+    spec_rows = P(axes, None, None)
+    mapped = backend.shard_map(
+        worker,
+        in_specs=(P(axes), spec_rows, spec_rows, P(None)),
+        out_specs=P(),
+    )
+
+    @jax.jit
+    def gnorm_at(w, block_indices, block_values, labels):
+        return jnp.sqrt(mapped(w, block_indices, block_values, labels))
+
+    return gnorm_at
 
 
 def run_fdsvrg_sharded(
@@ -185,13 +254,16 @@ def run_fdsvrg_sharded(
     accounting is directly comparable (asserted in tests); measured host
     wall-clock is reported per outer in the history, never mixed into the
     model.  Returns ``(w, history, backend)`` with history entries of
-    ``(outer, grad_norm, comm_scalars, wall_time_s)``.
+    ``(outer, grad_norm, comm_scalars, wall_time_s)``; ``grad_norm`` is
+    the optimality residual at the **post-epoch** iterate (via
+    :func:`make_optimality_eval`), matching every other driver.
     """
     backend = backend or ShardMapBackend(
         mesh=mesh, feature_axes=feature_axes,
         tree_mode=cfg.tree_mode, cluster=cluster,
     )
     step = make_outer_iteration(mesh, cfg, feature_axes, backend=backend)
+    gnorm_at = make_optimality_eval(mesh, cfg, feature_axes, backend=backend)
     q = backend.q
     block_data = BlockCSR.from_padded(data, balanced(cfg.dim, q))
     bidx, bval = block_data.stacked()
@@ -199,14 +271,23 @@ def run_fdsvrg_sharded(
     w = jnp.zeros((cfg.dim,), jnp.float32)
     n, nnz, u = cfg.num_instances, cfg.nnz_max, cfg.batch_size
     history = []
+    # Each record reports the residual at its POST-epoch iterate
+    # (consistent z/w pair, same convention as run_fdsvrg and the
+    # baselines).  The step fn already computes the snapshot residual in
+    # its full-gradient phase, and outer t+1's snapshot IS outer t's
+    # post-epoch iterate — so rotate it into the previous record and pay
+    # the standalone eval only once, for the final record.
+    pending = None  # (outer, scalars_after_outer, wall_s) awaiting its gnorm
     for t in range(outer_iters):
         samples = rng.integers(
             0, cfg.num_instances, size=(cfg.inner_steps, u)
         ).astype(np.int32)
         t0 = time.perf_counter()
-        w, gnorm = step(w, bidx, bval, data.labels, jnp.asarray(samples))
-        gnorm = float(gnorm)
+        w, gnorm_snapshot = step(w, bidx, bval, data.labels, jnp.asarray(samples))
         wall = time.perf_counter() - t0
+        if pending is not None:
+            history.append((pending[0], float(gnorm_snapshot),
+                            pending[1], pending[2]))
         # Same closed forms as run_fdsvrg: full-gradient phase ...
         backend.meter_tree(payload=n)
         backend.charge(
@@ -224,7 +305,10 @@ def run_fdsvrg_sharded(
                 rounds=backend.tree_rounds,
             )
         )
-        history.append((t, gnorm, backend.meter.total_scalars, wall))
+        pending = (t, backend.meter.total_scalars, wall)
+    if pending is not None:
+        history.append((pending[0], float(gnorm_at(w, bidx, bval, data.labels)),
+                        pending[1], pending[2]))
     return w, history, backend
 
 

@@ -96,29 +96,106 @@ hinge = MarginLoss(
 LOSSES = {l.name: l for l in (logistic, squared_hinge, hinge)}
 
 
+def soft_threshold(v: jax.Array, t: jax.Array | float) -> jax.Array:
+    """prox of t*||.||_1: sign(v) * max(|v| - t, 0), elementwise.
+
+    This exact expression is the numerics contract shared with the fused
+    Pallas prox kernel (kernels/prox_update.py) and its oracle
+    (kernels/ref.py) — same ops, same order, bit-identical results.
+    """
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class Regularizer:
-    """g(w) applied per feature block (paper eq. (3): g decomposes over blocks)."""
+    """g(w) applied per feature block (paper eq. (3): g decomposes over blocks).
+
+    Two ways to consume g in an optimizer:
+
+    * **smooth path** (``l2`` / ``none``): add :meth:`grad` (or its folded
+      coefficient :attr:`smooth_lam`) to the data gradient.
+    * **proximal path** (``l1`` / ``elastic_net``): the nonsmooth part is
+      handled by :meth:`prox` — the inner step becomes
+      ``w <- prox_{eta*g}(w - eta * smooth_grad)``.  Because g decomposes
+      over feature blocks (eq. 3), prox is elementwise and therefore
+      purely block-local: FD-Prox-SVRG adds **zero** communication.
+
+    ``lam`` is the L2 strength for ``l2``, the L1 strength for ``l1`` and
+    ``elastic_net``; ``lam2`` is the elastic-net L2 strength (closed-form
+    prox: soft-threshold then shrink by 1/(1 + eta*lam2)).
+    """
 
     name: str
     lam: float
+    lam2: float = 0.0
 
     def value(self, w: jax.Array) -> jax.Array:
         if self.name == "l2":
             return 0.5 * self.lam * jnp.sum(w * w)
         if self.name == "l1":
             return self.lam * jnp.sum(jnp.abs(w))
+        if self.name == "elastic_net":
+            return self.lam * jnp.sum(jnp.abs(w)) + 0.5 * self.lam2 * jnp.sum(w * w)
         if self.name == "none":
             return jnp.zeros((), dtype=w.dtype)
         raise ValueError(self.name)
 
     def grad(self, w: jax.Array) -> jax.Array:
+        """(Sub)gradient of g — diagnostics and the historical subgradient
+        path; the optimizers use smooth_grad + prox instead."""
         if self.name == "l2":
             return self.lam * w
         if self.name == "l1":
             return self.lam * jnp.sign(w)
+        if self.name == "elastic_net":
+            return self.lam * jnp.sign(w) + self.lam2 * w
         if self.name == "none":
             return jnp.zeros_like(w)
+        raise ValueError(self.name)
+
+    @property
+    def is_smooth(self) -> bool:
+        return self.name in ("l2", "none")
+
+    @property
+    def smooth_lam(self) -> float:
+        """L2 coefficient folded into the smooth gradient (0 unless 'l2';
+        the elastic-net L2 term goes through the closed-form prox)."""
+        return float(self.lam) if self.name == "l2" else 0.0
+
+    @property
+    def prox_l1(self) -> float:
+        """L1 strength handled by prox (0 for the smooth family)."""
+        if self.name in ("l1", "elastic_net"):
+            return float(self.lam)
+        if self.name in ("l2", "none"):
+            return 0.0
+        raise ValueError(self.name)
+
+    @property
+    def prox_l2(self) -> float:
+        """Elastic-net L2 strength handled by prox."""
+        return float(self.lam2) if self.name == "elastic_net" else 0.0
+
+    def smooth_grad(self, w: jax.Array) -> jax.Array:
+        """Gradient of the smooth part of g only (what the inner step adds
+        to the variance-reduced data gradient before prox)."""
+        if self.name == "l2":
+            return self.lam * w
+        if self.name in ("l1", "elastic_net", "none"):
+            return jnp.zeros_like(w)
+        raise ValueError(self.name)
+
+    def prox(self, v: jax.Array, eta: jax.Array | float) -> jax.Array:
+        """prox_{eta*g_nonsmooth}(v); identity for the smooth family, so the
+        proximal update specializes exactly to the classic SVRG step."""
+        if self.name in ("l2", "none"):
+            return v
+        if self.name == "l1":
+            return soft_threshold(v, eta * self.lam)
+        if self.name == "elastic_net":
+            out = soft_threshold(v, eta * self.lam)
+            return out / (1.0 + eta * self.lam2) if self.lam2 else out
         raise ValueError(self.name)
 
 
@@ -128,6 +205,10 @@ def l2(lam: float) -> Regularizer:
 
 def l1(lam: float) -> Regularizer:
     return Regularizer("l1", lam)
+
+
+def elastic_net(lam1: float, lam2: float) -> Regularizer:
+    return Regularizer("elastic_net", lam1, lam2)
 
 
 def no_reg() -> Regularizer:

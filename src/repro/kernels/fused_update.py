@@ -14,9 +14,11 @@ sampled rows into a fresh accumulator, then the fused elementwise update.
 
 ``eta`` arrives as a runtime (1, 1) scalar because Option II masks the
 step size per inner step (eta * mask_m) and the kernel must not retrace
-per step; ``lam`` is a compile-time constant of the run.  Only the L2
-family fuses the regularizer path (lam = 0 covers "none"); L1 stays on
-the reference path.
+per step; ``lam`` is a compile-time constant of the run.  This kernel
+covers the smooth L2 family (lam = 0 covers "none"); the drivers route
+through :mod:`repro.kernels.prox_update`, which extends the same pass
+with the block-local prox for L1 / elastic-net and reproduces this
+kernel's expression tree bit-exactly when both prox strengths are 0.
 
 ``interpret=True`` (CPU) is the numerics contract: the scatter and the
 update are computed with exactly the reference's jnp expression tree —

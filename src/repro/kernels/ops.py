@@ -18,6 +18,7 @@ from repro.kernels.fd_matvec import fd_matvec
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.fused_update import fused_update
 from repro.kernels.logistic_grad import logistic_grad
+from repro.kernels.prox_update import prox_update
 from repro.kernels.sparse_margin import sparse_margin
 from repro.kernels.svrg_update import svrg_update
 
@@ -83,6 +84,41 @@ def fused_block_update(
         z_block[None, :],
         jnp.asarray(eta, dtype=w_block.dtype)[None, None],
         lam=lam,
+        interpret=interpret,
+    )
+    return out[0, :d]
+
+
+def fused_block_prox_update(
+    w_block: jax.Array,  # [d_block]
+    indices: jax.Array,  # int32[u, nnz_l], block-LOCAL ids
+    values: jax.Array,  # [u, nnz_l]
+    coef: jax.Array,  # [u]
+    z_block: jax.Array,  # [d_block]
+    eta: jax.Array | float,  # runtime scalar (eta * option mask)
+    *,
+    lam: float,  # smooth L2 coefficient (the classic 'l2' path)
+    lam1: float = 0.0,  # L1 strength handled by the fused prox
+    lam2: float = 0.0,  # elastic-net L2 strength handled by the fused prox
+    interpret: bool | None = None,
+) -> jax.Array:  # [d_block]
+    """Fused scatter-grad + proximal variance-reduced update on one block:
+    prox_{eta*g}(w - eta * (scatter(coef * x) + z + lam * w)) in a single
+    pass.  Covers the whole regularizer family — lam1 = lam2 = 0 elides
+    the prox stages, reproducing :func:`fused_block_update` bit-exactly;
+    the prox is elementwise (paper eq. 3), so it stays block-local."""
+    interpret = _interpret_default() if interpret is None else interpret
+    d = w_block.shape[0]
+    out = prox_update(
+        w_block[None, :],
+        indices,
+        values,
+        coef[None, :],
+        z_block[None, :],
+        jnp.asarray(eta, dtype=w_block.dtype)[None, None],
+        lam=lam,
+        lam1=lam1,
+        lam2=lam2,
         interpret=interpret,
     )
     return out[0, :d]
@@ -175,6 +211,7 @@ def decode_attention(
 __all__ = [
     "sparse_margins",
     "fused_block_update",
+    "fused_block_prox_update",
     "margins_dense",
     "loss_and_grad",
     "svrg_dense_update",

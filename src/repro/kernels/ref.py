@@ -54,6 +54,38 @@ def fused_update_ref(
     return w - eta * (g + z + lam * w)
 
 
+def prox_update_ref(
+    w: jax.Array,  # [d_block]
+    indices: jax.Array,  # int32[u, nnz_l], block-LOCAL ids
+    values: jax.Array,  # [u, nnz_l]
+    coef: jax.Array,  # [u]
+    z: jax.Array,  # [d_block]
+    eta: jax.Array | float,
+    *,
+    lam: float,
+    lam1: float,
+    lam2: float,
+) -> jax.Array:  # [d_block]
+    """Fused scatter-grad + proximal VR update, whole regularizer family:
+    v = w - eta * (scatter(coef * x) + z + lam * w), then the closed-form
+    prox — soft-threshold by eta*lam1, shrink by 1/(1+eta*lam2) — in
+    exactly the reference association order of the FD-Prox-SVRG inner
+    loop.  lam1 == lam2 == 0 elides the prox stages at trace time,
+    reproducing :func:`fused_update_ref` verbatim."""
+    contrib = values * coef[..., None]
+    g = (
+        jnp.zeros_like(w)
+        .at[indices.reshape(-1)]
+        .add(contrib.reshape(-1))
+    )
+    v = w - eta * (g + z + lam * w)
+    if lam1 != 0.0 or lam2 != 0.0:
+        v = jnp.sign(v) * jnp.maximum(jnp.abs(v) - eta * lam1, 0.0)
+        if lam2 != 0.0:
+            v = v / (1.0 + eta * lam2)
+    return v
+
+
 def svrg_update_ref(
     w: jax.Array, g_sparse: jax.Array, z: jax.Array, *, eta: float, lam: float
 ) -> jax.Array:

@@ -158,13 +158,21 @@ def test_use_kernels_option_II_and_minibatch(tiny_data):
     np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
 
 
-def test_use_kernels_rejects_l1():
+@pytest.mark.parametrize(
+    "reg",
+    [losses.l1(1e-3), losses.elastic_net(1e-3, 1e-4), losses.no_reg()],
+    ids=["l1", "elastic_net", "none"],
+)
+def test_use_kernels_accepts_whole_regularizer_family(reg):
+    """The historical `_kernel_lam` L2-only ValueError is gone: the fused
+    prox kernel covers l1 / elastic-net / none, bit-identical to jnp."""
     data = make_sparse_classification(
-        dim=64, num_instances=8, nnz_per_instance=4, seed=0
+        dim=128, num_instances=16, nnz_per_instance=4, seed=0
     )
-    cfg = SVRGConfig(eta=0.1, inner_steps=2, outer_iters=1)
-    with pytest.raises(ValueError, match="L2"):
-        run_serial_svrg(data, LOSS, losses.l1(1e-3), cfg, use_kernels=True)
+    cfg = SVRGConfig(eta=0.1, inner_steps=6, outer_iters=2)
+    a = run_serial_svrg(data, LOSS, reg, cfg, use_kernels=False)
+    b = run_serial_svrg(data, LOSS, reg, cfg, use_kernels=True)
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
 
 
 def test_fdsvrg_accepts_prebuilt_block_data(tiny_data):
@@ -179,6 +187,59 @@ def test_fdsvrg_accepts_prebuilt_block_data(tiny_data):
     with pytest.raises(ValueError, match="partition"):
         run_fdsvrg(tiny_data, balanced(tiny_data.dim, 2), LOSS, REG, cfg,
                    block_data=block_data)
+
+
+# ---------------------------------------------------------------------------
+# 1c. grad_norm regression: recorded norm is the gradient AT the recorded
+# iterate, not the stale snapshot pair the drivers used to report
+# ---------------------------------------------------------------------------
+
+
+def _expected_grad_norm(data, w, reg):
+    gd, _ = full_gradient(data, w, losses.logistic)
+    return float(jnp.linalg.norm(gd + reg.grad(w)))
+
+
+@pytest.mark.parametrize("outers", [1, 2])
+@pytest.mark.parametrize(
+    "runner",
+    [
+        lambda d, cfg: run_serial_svrg(d, LOSS, REG, cfg),
+        lambda d, cfg: run_fdsvrg(d, balanced(d.dim, 4), LOSS, REG, cfg),
+        lambda d, cfg: baselines.run_dsvrg(d, 4, LOSS, REG, cfg),
+        lambda d, cfg: baselines.run_syn_svrg(d, 4, LOSS, REG, cfg),
+        lambda d, cfg: baselines.run_asy_svrg(d, 4, LOSS, REG, cfg),
+    ],
+    ids=["serial", "fdsvrg", "dsvrg", "synsvrg", "asysvrg"],
+)
+def test_grad_norm_recorded_at_post_epoch_iterate(tiny_data, runner, outers):
+    """history[-1].grad_norm must equal an independently computed
+    ||grad f(w_history)|| at the returned iterate (the historical code mixed
+    the snapshot z with the post-epoch w — the norm of nothing)."""
+    cfg = SVRGConfig(eta=0.2, inner_steps=16, outer_iters=outers, seed=13)
+    res = runner(tiny_data, cfg)
+    want = _expected_grad_norm(tiny_data, res.w, REG)
+    got = res.history[-1].grad_norm
+    # blockwise (tree-order) vs global float summation differ in the last
+    # bits only
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+
+
+def test_grad_norm_every_record_consistent(tiny_data):
+    """Each record's grad_norm corresponds to that outer's post-epoch w:
+    truncated reruns (same seed => same iterate prefix) agree record-for-
+    record with the longer run."""
+    cfg3 = SVRGConfig(eta=0.2, inner_steps=16, outer_iters=3, seed=2)
+    full = run_fdsvrg(tiny_data, balanced(tiny_data.dim, 4), LOSS, REG, cfg3)
+    for outers in (1, 2):
+        cfg = SVRGConfig(eta=0.2, inner_steps=16, outer_iters=outers, seed=2)
+        part = run_fdsvrg(tiny_data, balanced(tiny_data.dim, 4), LOSS, REG, cfg)
+        assert part.history[-1].grad_norm == full.history[outers - 1].grad_norm
+        np.testing.assert_allclose(
+            part.history[-1].grad_norm,
+            _expected_grad_norm(tiny_data, part.w, REG),
+            rtol=1e-4,
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -155,6 +155,32 @@ def test_sharded_driver_metering_matches_simulation_driver():
     )
 
 
+def test_sharded_driver_gnorm_is_post_epoch_residual():
+    """history[-1]'s grad_norm must be the optimality residual at the
+    RETURNED iterate (the step fn's own gnorm output is the snapshot
+    residual — one epoch stale for reporting purposes)."""
+    from repro.core.fdsvrg import full_gradient, optimality_norm
+
+    data = make_sparse_classification(
+        dim=256, num_instances=32, nnz_per_instance=8, seed=2
+    )
+    mesh = jax.make_mesh((1,), ("model",))
+    for reg_name, lam, lam2 in (("l2", 1e-3, 0.0), ("l1", 2e-3, 0.0)):
+        cfg = FDSVRGShardedConfig(
+            dim=data.dim, num_instances=data.num_instances, nnz_max=data.nnz_max,
+            eta=0.2, inner_steps=8, batch_size=2,
+            reg_name=reg_name, lam=lam, lam2=lam2,
+        )
+        w, history, backend = run_fdsvrg_sharded(
+            data, mesh, cfg, feature_axes=("model",), outer_iters=2, seed=0
+        )
+        gd, _ = full_gradient(data, w, losses.logistic)
+        want = optimality_norm(
+            gd, w, losses.Regularizer(reg_name, lam, lam2), cfg.eta
+        )
+        np.testing.assert_allclose(history[-1][1], want, rtol=1e-4)
+
+
 def test_input_shardings_match_step_arity():
     mesh = jax.make_mesh((1,), ("model",))
     shardings = input_shardings(mesh, feature_axes=("model",))

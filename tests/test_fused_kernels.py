@@ -126,6 +126,78 @@ def test_fused_update_collapses_three_passes():
 
 
 # ---------------------------------------------------------------------------
+# prox_update (the whole-regularizer-family fused kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,u,nnz", [(64, 1, 4), (300, 5, 9), (1024, 16, 8)])
+@pytest.mark.parametrize(
+    "lam,lam1,lam2",
+    [
+        (1e-4, 0.0, 0.0),  # l2: the prox stages elide at trace time
+        (0.0, 1e-2, 0.0),  # l1: soft-threshold
+        (0.0, 1e-2, 1e-3),  # elastic net: threshold + shrink
+        (0.0, 0.0, 0.0),  # none
+    ],
+)
+def test_prox_update_matches_ref_bitwise(d, u, nnz, lam, lam1, lam2):
+    w, idx, val = _case(d, u, nnz, seed=d + u)
+    coef = jnp.asarray(RNG.normal(size=u).astype(np.float32))
+    z = jnp.asarray(RNG.normal(size=d).astype(np.float32))
+    eta = jnp.float32(0.2)
+    got = ops.fused_block_prox_update(
+        w, idx, val, coef, z, eta, lam=lam, lam1=lam1, lam2=lam2, interpret=True
+    )
+    want = jax.jit(
+        ref.prox_update_ref, static_argnames=("lam", "lam1", "lam2")
+    )(w, idx, val, coef, z, eta, lam=lam, lam1=lam1, lam2=lam2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_prox_update_l2_path_reproduces_fused_update():
+    """lam1 = lam2 = 0 must leave exactly the fused_update expression tree —
+    the L2 family keeps its historical bit-identity."""
+    w, idx, val = _case(256, 4, 6, seed=2)
+    coef = jnp.asarray(RNG.normal(size=4).astype(np.float32))
+    z = jnp.asarray(RNG.normal(size=256).astype(np.float32))
+    eta = jnp.float32(0.1)
+    a = ops.fused_block_update(w, idx, val, coef, z, eta, lam=1e-3, interpret=True)
+    b = ops.fused_block_prox_update(
+        w, idx, val, coef, z, eta, lam=1e-3, lam1=0.0, lam2=0.0, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prox_update_masked_step_is_identity():
+    """eta * mask = 0 (Option II tail): threshold 0, shrink 1 — w unchanged
+    (up to the sign of zero, which compares equal)."""
+    w, idx, val = _case(100, 3, 5, seed=9)
+    coef = jnp.asarray(RNG.normal(size=3).astype(np.float32))
+    z = jnp.asarray(RNG.normal(size=100).astype(np.float32))
+    got = ops.fused_block_prox_update(
+        w, idx, val, coef, z, jnp.float32(0.0), lam=0.0, lam1=1e-2, lam2=1e-3,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(w))
+
+
+def test_prox_update_thresholds_small_coordinates():
+    """Coordinates whose post-step magnitude falls below eta*lam1 come out
+    exactly zero — the sparsity mechanism itself."""
+    d = 32
+    w = jnp.full((d,), 1e-4, jnp.float32)
+    idx = jnp.zeros((1, 1), jnp.int32)
+    val = jnp.zeros((1, 1), jnp.float32)
+    coef = jnp.zeros((1,), jnp.float32)
+    z = jnp.zeros((d,), jnp.float32)
+    out = ops.fused_block_prox_update(
+        w, idx, val, coef, z, jnp.float32(0.1), lam=0.0, lam1=1.0, lam2=0.0,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(d, np.float32))
+
+
+# ---------------------------------------------------------------------------
 # hypothesis properties (CI; dev-only dep)
 # ---------------------------------------------------------------------------
 
@@ -164,4 +236,27 @@ if HAS_HYPOTHESIS:
         want = jax.jit(ref.fused_update_ref, static_argnames=("lam",))(
             w, idx, val, coef, z, jnp.float32(eta), lam=float(lam)
         )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(
+        st.integers(min_value=1, max_value=200),
+        st.integers(min_value=1, max_value=8),
+        st.floats(min_value=1e-4, max_value=1.0),
+        st.floats(min_value=0.0, max_value=0.1),
+        st.floats(min_value=0.0, max_value=0.1),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_property_prox_update_interpret_equivalence(d, u, eta, lam1, lam2):
+        rng = np.random.default_rng(d * 13 + u)
+        w, idx, val = _case(d, u, 5, seed=d + 2 * u)
+        coef = jnp.asarray(rng.normal(size=u).astype(np.float32))
+        z = jnp.asarray(rng.normal(size=d).astype(np.float32))
+        got = ops.fused_block_prox_update(
+            w, idx, val, coef, z, jnp.float32(eta), lam=0.0,
+            lam1=float(lam1), lam2=float(lam2), interpret=True,
+        )
+        want = jax.jit(
+            ref.prox_update_ref, static_argnames=("lam", "lam1", "lam2")
+        )(w, idx, val, coef, z, jnp.float32(eta), lam=0.0,
+          lam1=float(lam1), lam2=float(lam2))
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
