@@ -13,9 +13,9 @@ effective sparse throughput of an E5-2620-class core.
 from __future__ import annotations
 
 import csv
-import math
 import os
 import time
+from collections import OrderedDict
 
 import numpy as np
 
@@ -25,21 +25,32 @@ from repro.core.partition import balanced
 from repro.core import baselines
 from repro.data import datasets
 from repro.data.block_csr import BlockCSR
-from repro.dist import ClusterModel, CommReport
+from repro.dist import COSTS, ClusterModel, CommReport
 
 # Re-indexing a data set into BlockCSR is host-side numpy work; sweeps call
-# run_method repeatedly with the same (data, q), so amortize it.  Values
-# keep a strong ref to the data object so the id() key cannot be reused.
-_BLOCK_CACHE: dict[tuple[int, int], tuple[object, BlockCSR]] = {}
+# run_method repeatedly with the same (data, q), so amortize it — but with
+# per-sweep scope: a new data object evicts every entry built for other
+# data sets (the unbounded id()-keyed dict used to pin whole data sets
+# alive across sweeps), and an LRU bound caps the per-data entries too.
+_BLOCK_CACHE: "OrderedDict[tuple[int, int], tuple[object, BlockCSR]]" = OrderedDict()
+_BLOCK_CACHE_MAX = 4  # distinct q values cached for the current data set
 
 
 def _block_data(data, q: int) -> BlockCSR:
     key = (id(data), q)
     hit = _BLOCK_CACHE.get(key)
-    if hit is None or hit[0] is not data:
-        hit = (data, BlockCSR.from_padded(data, balanced(data.dim, q)))
-        _BLOCK_CACHE[key] = hit
-    return hit[1]
+    if hit is not None and hit[0] is data:
+        _BLOCK_CACHE.move_to_end(key)
+        return hit[1]
+    # New data object: this sweep moved on — drop other data sets' entries
+    # (and any stale entry whose id() was recycled).
+    for k in [k for k, v in _BLOCK_CACHE.items() if v[0] is not data]:
+        del _BLOCK_CACHE[k]
+    block = BlockCSR.from_padded(data, balanced(data.dim, q))
+    _BLOCK_CACHE[key] = (data, block)
+    while len(_BLOCK_CACHE) > _BLOCK_CACHE_MAX:
+        _BLOCK_CACHE.popitem(last=False)
+    return block
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
 
@@ -77,48 +88,22 @@ def analytic_outer(method: str, spec, q: int, u: int = FD_BATCH,
     """(modeled seconds, scalars communicated) for ONE outer iteration of
     ``method`` at the full-size dataset ``spec``, q workers.
 
-    Cost model: lazy sparse updates (O(nnz) per sampled gradient) for every
-    method; dense d-vectors cross the wire only where the algorithm
-    genuinely requires them (DSVRG full-gradient round + handoff, PS full
-    gradients and dense pulls); paper M conventions (FD: M=N; DSVRG/Syn:
-    M=N/q; Asy/PS: M=N).
+    Thin wrapper over the ONE cost model (:data:`repro.dist.COSTS`) — the
+    same closed forms the measured-sim drivers charge, at the paper's M
+    conventions (FD: M=N/u; DSVRG/Syn: M=N/q; Asy/PS: M=N).  ``u`` is the
+    FD mini-batch (§4.4.1); the baselines run the paper's per-worker
+    batch of 1, matching :func:`run_method`'s configs — which is what the
+    drift-guard test pins meter-for-meter against this function.
     """
-    d, n, nnz = spec.dim, spec.num_instances, spec.nnz_per_instance
-    f, bw, lat = cluster.flops_per_s, cluster.bandwidth_Bps, cluster.latency_s
-    bps = cluster.bytes_per_scalar
-    log_rounds = 2 * max(1, math.ceil(math.log2(q))) if q > 1 else 0
-
-    if method in ("fdsvrg", "serial"):
-        if method == "serial" or q == 1:
-            return 6.0 * n * nnz / f, 0
-        m = max(1, n // u)
-        comm = 2 * q * n + 2 * q * u * m  # fullgrad tree + per-step trees
-        compute = 6.0 * n * nnz / q  # fullgrad(4) + inner(2), all parallel
-        time_s = compute / f + comm * bps / bw + log_rounds * (m + 1) * lat
-        return time_s, comm
-    if method == "dsvrg":
-        m = max(1, n // q)
-        comm = 2 * q * d + 2 * d
-        compute = 4.0 * n * nnz / (q * f) + 2.0 * m * nnz / f  # serial inner
-        time_s = compute + comm * bps / bw + 4 * lat
-        return time_s, comm
-    if method == "synsvrg":
-        m = max(1, n // q)
-        comm = 2 * q * d + m * 4 * q * nnz  # dense fullgrad + sparse pull/push
-        compute = 4.0 * n * nnz / (q * f) + 2.0 * m * nnz / f
-        time_s = compute + comm * bps / bw + (2 + 2 * m) * lat
-        return time_s, comm
-    if method in ("asysvrg", "pslite_sgd"):
-        m = n
-        per_step_comm = 4 * nnz  # sparse pull + push (<key,value>)
-        comm = m * per_step_comm
-        if method == "asysvrg":
-            comm += 2 * q * d  # dense full-gradient round
-        # async: q workers overlap compute; server serializes messages
-        step_time = max(per_step_comm * bps / bw, 2.0 * nnz / (f * q))
-        time_s = m * step_time + (2 * q * d * bps / bw if method == "asysvrg" else 0)
-        return time_s, comm
-    raise ValueError(method)
+    return COSTS.outer_cost(
+        method,
+        n=spec.num_instances,
+        d=spec.dim,
+        nnz=spec.nnz_per_instance,
+        q=q,
+        u=u if method in ("fdsvrg", "serial") else 1,
+        cluster=cluster,
+    )
 
 
 def analytic_schedule(method: str, spec, q: int, outers: int, u: int = FD_BATCH):
@@ -163,6 +148,7 @@ def run_method(
     outer_iters: int = 6,
     batch_size: int | None = None,
     seed: int = 0,
+    use_kernels: bool = False,
 ) -> RunResult:
     """One named method on one data set with the paper's M conventions.
 
@@ -171,7 +157,15 @@ def run_method(
     variants (every method runs the same prox update family, so Fig-6/7
     comparisons stay like-for-like).  ``lam`` stays the headline strength
     either way, so a mismatched override fails loudly instead of silently
-    running at a different lambda than the caller reports."""
+    running at a different lambda than the caller reports.
+
+    ``use_kernels=True`` routes the ``serial``/``fdsvrg`` hot paths
+    through the fused Pallas kernels (interpret mode off-TPU) —
+    bit-identical iterates and meters to the jnp path, so BENCH_*
+    trajectories can exercise the kernels directly.  Note the fused
+    kernels bake lambda in at compile time, so kernel-path sweeps pay one
+    compile per lambda point (the jnp path traces lambda and compiles
+    once per sweep)."""
     if reg is None:
         reg = losses.l2(lam)
     elif reg.lam != lam:
@@ -187,11 +181,12 @@ def run_method(
         cfg = SVRGConfig(eta=eta, inner_steps=m,
                          outer_iters=outer_iters, batch_size=u, seed=seed)
         return run_fdsvrg(data, balanced(data.dim, q), LOSS, reg, cfg, CLUSTER,
+                          use_kernels=use_kernels,
                           block_data=_block_data(data, q))
     if method == "serial":
         cfg = SVRGConfig(eta=eta, inner_steps=min(n, MAX_INNER),
                          outer_iters=outer_iters, seed=seed)
-        return run_serial_svrg(data, LOSS, reg, cfg)
+        return run_serial_svrg(data, LOSS, reg, cfg, use_kernels=use_kernels)
     if method == "dsvrg":
         cfg = SVRGConfig(eta=eta, inner_steps=min(max(1, n // q), MAX_INNER),
                          outer_iters=outer_iters, seed=seed)

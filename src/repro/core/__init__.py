@@ -2,12 +2,18 @@
 
 from repro.core import losses
 from repro.core.comm import ClusterModel, CommMeter, TpuV5eModel
-from repro.core.fdsvrg import (
+from repro.core.driver import (
+    OuterRecord,
     RunResult,
+    make_same_iterate_eval,
+    objective_from_margins,
+    optimality_norm,
+    run_outer_loop,
+)
+from repro.core.fdsvrg import (
     SVRGConfig,
     full_gradient,
     objective,
-    optimality_norm,
     run_fdsvrg,
     run_serial_svrg,
     fdsvrg_worker_simulation,
@@ -19,12 +25,16 @@ __all__ = [
     "ClusterModel",
     "CommMeter",
     "TpuV5eModel",
+    "OuterRecord",
     "RunResult",
     "SVRGConfig",
     "full_gradient",
+    "make_same_iterate_eval",
     "objective",
+    "objective_from_margins",
     "optimality_norm",
     "run_fdsvrg",
+    "run_outer_loop",
     "run_serial_svrg",
     "fdsvrg_worker_simulation",
     "FeaturePartition",

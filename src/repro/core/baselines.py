@@ -13,38 +13,39 @@
 * :func:`run_pslite_sgd` — PS-Lite (SGD): asynchronous SGD, no variance
   reduction (the paper's Table 3 baseline).
 
-All baselines share the exact loss/regularizer code with FD-SVRG and run
-on the same :class:`repro.dist.Collectives` substrate: every message is
-metered (scalars + rounds) and modeled wall-clock is accumulated through
-the backend's shared :class:`~repro.dist.meter.ClusterModel`, so Figures
-6/7 and Tables 2/3 compare like-for-like.  Sparse pushes are metered as
-2·nnz scalars (key+value pairs — the PS-Lite <key,value> optimization the
-paper grants the baselines); dense pulls as d scalars.
+All baselines share the exact loss/regularizer code with FD-SVRG, run on
+the same :class:`repro.dist.Collectives` substrate, drive the same
+outer-loop engine (:func:`repro.core.driver.run_outer_loop` — snapshot
+rotation, sampling, same-iterate reporting), and charge the same §4.5
+closed forms (:data:`repro.dist.COSTS`), so Figures 6/7 and Tables 2/3
+compare like-for-like.  Sparse pushes are metered as 2·u·nnz scalars
+(key+value pairs — the PS-Lite <key,value> optimization the paper grants
+the baselines); dense pulls as d scalars.
 """
 
 from __future__ import annotations
 
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import losses as losses_lib
+from repro.core.driver import (
+    make_same_iterate_eval,
+    option_mask,
+    run_outer_loop,
+)
 from repro.core.fdsvrg import (
-    OuterRecord,
     RunResult,
     SVRGConfig,
-    _draw_samples,
     _inner_epoch,
-    _option_mask,
+    draw_samples,
     full_gradient,
-    objective_from_margins,
-    optimality_norm,
 )
 from repro.data.sparse import PaddedCSR
-from repro.dist import ClusterModel, Collectives, SimBackend
+from repro.dist import COSTS, ClusterModel, Collectives, SimBackend
 
 
 def instance_shards(n: int, q: int) -> list[tuple[int, int]]:
@@ -72,32 +73,25 @@ def run_dsvrg(
     backend: Collectives | None = None,
 ) -> RunResult:
     backend = backend or SimBackend(q, cluster)
-    rng = np.random.default_rng(cfg.seed)
     n, d, nnz = data.num_instances, data.dim, data.nnz_max
     shards = instance_shards(n, q)
-    w = jnp.zeros((d,), dtype=data.values.dtype)
-    history: list[OuterRecord] = []
     m_local = cfg.inner_steps  # paper: M = local instance count = N/q
-    t_start = time.perf_counter()
 
-    # Snapshot gradient for outer 0; each post-epoch gradient below doubles
-    # as the next snapshot, so grad_norm pairs z and w at the same iterate.
-    z_data, s0 = full_gradient(data, w, loss)
-    for t in range(cfg.outer_iters):
+    def snapshot(w):
+        return full_gradient(data, w, loss)
+
+    def epoch(t, rng, w, z_data, s0):
         # center -> q machines: w (d each); machines -> center: grad (d each)
-        backend.p2p(2 * q * d, "dsvrg_fullgrad", rounds=2)
-        backend.charge(
-            flops=4.0 * (n / q) * nnz,
-            scalars=2 * q * d,
-            rounds=2,
-        )
+        fg = COSTS.dsvrg_fullgrad(n=n, d=d, nnz=nnz, q=q)
+        backend.p2p(fg.scalars, "dsvrg_fullgrad", rounds=fg.rounds)
+        backend.charge_cost(fg)
 
         # inner loop runs on machine J = t mod q over its local shard
         lo, hi = shards[t % q]
         samples = (
             rng.integers(lo, hi, size=(m_local, cfg.batch_size)).astype(np.int32)
         )
-        mask = _option_mask(rng, m_local, cfg.option)
+        mask = option_mask(rng, m_local, cfg.option)
         w = _inner_epoch(
             (data.indices,), (data.values,), data.labels,
             w, z_data, s0,
@@ -105,23 +99,22 @@ def run_dsvrg(
             loss.name, reg.name, reg.lam, (data.dim,), False,
             lam2=reg.lam2,
         )
-        # center -> J: full gradient (d); J -> center: parameter (d)
-        backend.p2p(2 * d, "dsvrg_handoff", rounds=2)
-        backend.charge(
-            flops=2.0 * m_local * (cfg.batch_size * nnz + d),
-            scalars=2 * d,
-            rounds=2,
-        )
+        # M serial steps + center -> J: full gradient (d); J -> center:
+        # parameter (d)
+        ep = COSTS.dsvrg_epoch(m=m_local, nnz=nnz, d=d, u=cfg.batch_size)
+        backend.p2p(ep.scalars, "dsvrg_handoff", rounds=ep.rounds)
+        backend.charge_cost(ep)
+        return w
 
-        z_data, s0 = full_gradient(data, w, loss)
-        obj = objective_from_margins(s0, data.labels, w, loss, reg)
-        gnorm = optimality_norm(z_data, w, reg, cfg.eta)
-        history.append(
-            OuterRecord(t, obj, gnorm, backend.meter.total_scalars,
-                        backend.meter.total_rounds, backend.modeled_time_s,
-                        time.perf_counter() - t_start)
-        )
-    return RunResult(w=w, history=history, meter=backend.meter)
+    return run_outer_loop(
+        outer_iters=cfg.outer_iters,
+        seed=cfg.seed,
+        init_w=jnp.zeros((d,), dtype=data.values.dtype),
+        snapshot=snapshot,
+        epoch=epoch,
+        evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
+        backend=backend,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -139,26 +132,19 @@ def run_syn_svrg(
     backend: Collectives | None = None,
 ) -> RunResult:
     backend = backend or SimBackend(q, cluster)
-    rng = np.random.default_rng(cfg.seed)
     n, d, nnz = data.num_instances, data.dim, data.nnz_max
-    w = jnp.zeros((d,), dtype=data.values.dtype)
-    history: list[OuterRecord] = []
-    t_start = time.perf_counter()
 
-    # Snapshot gradient for outer 0; see run_dsvrg for the rotation that
-    # keeps grad_norm a same-iterate quantity.
-    z_data, s0 = full_gradient(data, w, loss)
-    for t in range(cfg.outer_iters):
-        backend.p2p(2 * q * d, "ps_fullgrad", rounds=2)
-        backend.charge(
-            flops=4.0 * (n / q) * nnz,
-            scalars=2 * q * d,
-            rounds=2,
-        )
+    def snapshot(w):
+        return full_gradient(data, w, loss)
+
+    def epoch(t, rng, w, z_data, s0):
+        fg = COSTS.ps_fullgrad(n=n, d=d, nnz=nnz, q=q)
+        backend.p2p(fg.scalars, "ps_fullgrad", rounds=fg.rounds)
+        backend.charge_cost(fg)
 
         # One sample per worker per synchronous step -> mini-batch of q.
-        samples = _draw_samples(rng, n, cfg.inner_steps, q)
-        mask = _option_mask(rng, cfg.inner_steps, cfg.option)
+        samples = draw_samples(rng, n, cfg.inner_steps, q)
+        mask = option_mask(rng, cfg.inner_steps, cfg.option)
         w = _inner_epoch(
             (data.indices,), (data.values,), data.labels,
             w, z_data, s0,
@@ -167,28 +153,22 @@ def run_syn_svrg(
             lam2=reg.lam2,
         )
         # per step: q workers pull dense w (q*d), push sparse VR grads
-        # (2*nnz keys+values each) -- the <key,value> concession.
-        per_step = q * d + q * 2 * cfg.batch_size * nnz
-        backend.p2p(per_step * cfg.inner_steps, "ps_inner",
-                    rounds=2 * cfg.inner_steps)
-        backend.charge_seconds(
-            cfg.inner_steps
-            * backend.cluster.time(
-                critical_flops=2.0 * nnz * cfg.batch_size + 2.0 * d,
-                critical_scalars=per_step,
-                rounds=2,
-            )
-        )
+        # (2*u*nnz keys+values each) -- the <key,value> concession.
+        st = COSTS.syn_inner_step(d=d, nnz=nnz, q=q, u=cfg.batch_size)
+        backend.p2p(st.scalars * cfg.inner_steps, "ps_inner",
+                    rounds=st.rounds * cfg.inner_steps)
+        backend.charge_cost(st, steps=cfg.inner_steps)
+        return w
 
-        z_data, s0 = full_gradient(data, w, loss)
-        obj = objective_from_margins(s0, data.labels, w, loss, reg)
-        gnorm = optimality_norm(z_data, w, reg, cfg.eta)
-        history.append(
-            OuterRecord(t, obj, gnorm, backend.meter.total_scalars,
-                        backend.meter.total_rounds, backend.modeled_time_s,
-                        time.perf_counter() - t_start)
-        )
-    return RunResult(w=w, history=history, meter=backend.meter)
+    return run_outer_loop(
+        outer_iters=cfg.outer_iters,
+        seed=cfg.seed,
+        init_w=jnp.zeros((d,), dtype=data.values.dtype),
+        snapshot=snapshot,
+        epoch=epoch,
+        evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
+        backend=backend,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -264,29 +244,25 @@ def _run_async(
     variance_reduced: bool,
     kind: str,
 ) -> RunResult:
-    rng = np.random.default_rng(cfg.seed)
-    cluster = backend.cluster
     n, d, nnz = data.num_instances, data.dim, data.nnz_max
-    w = jnp.zeros((d,), dtype=data.values.dtype)
-    history: list[OuterRecord] = []
     delay_buf = max(2, q)
-    t_start = time.perf_counter()
 
-    for t in range(cfg.outer_iters):
+    def snapshot(w):
+        # Rotated into the epoch as the VR anchor; for the non-VR PS-Lite
+        # path it is reporting-only (the epoch passes dead zeros instead).
+        return full_gradient(data, w, loss)
+
+    def epoch(t, rng, w, z_data, s0):
         if variance_reduced:
-            z_data, s0 = full_gradient(data, w, loss)
-            backend.p2p(2 * q * d, f"{kind}_fullgrad", rounds=2)
-            backend.charge(
-                flops=4.0 * (n / q) * nnz,
-                scalars=2 * q * d,
-                rounds=2,
-            )
+            fg = COSTS.ps_fullgrad(n=n, d=d, nnz=nnz, q=q)
+            backend.p2p(fg.scalars, f"{kind}_fullgrad", rounds=fg.rounds)
+            backend.charge_cost(fg)
         else:
             # No variance reduction: z is identically zero (in the data's
             # dtype, so float64 runs don't silently promote), and s0 is
             # dead in this jit specialization (_async_epoch reads it only
             # under variance_reduced=True) — zeros keep the call signature
-            # without paying O(N·nnz) per outer for a discarded gradient.
+            # without charging the algorithm for a gradient it never takes.
             z_data = jnp.zeros((d,), data.values.dtype)
             s0 = jnp.zeros((n,), data.values.dtype)
 
@@ -301,28 +277,27 @@ def _run_async(
         )
         # per async step: one worker pulls dense w (d) and pushes a sparse
         # (VR-)gradient (2*nnz) -- but the reg term makes pushes dense in
-        # practice; we still grant sparsity to the baseline.
-        per_step = d + 2 * nnz
+        # practice; we still grant sparsity to the baseline.  Async: q
+        # workers overlap compute; the server serializes message handling,
+        # so throughput is bounded by the server's bandwidth.
+        per_step = COSTS.async_step_scalars(d=d, nnz=nnz)
         backend.p2p(per_step * cfg.inner_steps, f"{kind}_inner",
                     rounds=2 * cfg.inner_steps)
-        # Async: q workers overlap compute; the server serializes message
-        # handling, so throughput is bounded by the server's bandwidth.
         backend.charge_seconds(
-            cfg.inner_steps * max(
-                (2.0 * nnz + 2.0 * d) / cluster.flops_per_s / q,
-                per_step * cluster.bytes_per_scalar / cluster.bandwidth_Bps,
-            )
+            cfg.inner_steps
+            * COSTS.async_step_seconds(backend.cluster, d=d, nnz=nnz, q=q)
         )
+        return w
 
-        gd, s_post = full_gradient(data, w, loss)
-        obj = objective_from_margins(s_post, data.labels, w, loss, reg)
-        gnorm = optimality_norm(gd, w, reg, cfg.eta)
-        history.append(
-            OuterRecord(t, obj, gnorm, backend.meter.total_scalars,
-                        backend.meter.total_rounds, backend.modeled_time_s,
-                        time.perf_counter() - t_start)
-        )
-    return RunResult(w=w, history=history, meter=backend.meter)
+    return run_outer_loop(
+        outer_iters=cfg.outer_iters,
+        seed=cfg.seed,
+        init_w=jnp.zeros((d,), dtype=data.values.dtype),
+        snapshot=snapshot,
+        epoch=epoch,
+        evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
+        backend=backend,
+    )
 
 
 def run_asy_svrg(data, q, loss, reg, cfg, cluster=None, backend=None) -> RunResult:

@@ -1,0 +1,215 @@
+"""The ONE outer-loop harness every optimizer driver runs on.
+
+Before this module existed, the outer loop — snapshot rotation, sample
+drawing, objective/optimality reporting, history construction — was
+hand-copied into six drivers, and the copies drifted (PR 3 fixed the same
+stale grad-norm bug six times; the shard_map driver then drifted again).
+:func:`run_outer_loop` is the single engine; a driver supplies three
+hooks and nothing else:
+
+``snapshot(w) -> (z_data, s0)``
+    The data part of the full gradient and the margins at ``w``,
+    **compute only** — never meters.  The harness calls it once before
+    the first epoch (the outer-0 snapshot) and once after every epoch:
+    the post-epoch full gradient doubles as the next outer's snapshot
+    AND as the same-iterate diagnostic pair for reporting, so the whole
+    run pays exactly one extra full gradient.
+
+``epoch(t, rng, w, z_data, s0) -> w``
+    One outer iteration's inner work: draw samples (via
+    :func:`draw_samples` / :func:`option_mask` so every driver consumes
+    the rng stream the same way), run the inner loop, and meter/charge
+    ALL the traffic and modeled compute this outer consumes — including
+    the snapshot tree it consumed — through the backend, with the closed
+    forms of :mod:`repro.dist.costs`.  Metering lives here, not in
+    ``snapshot``, so the per-run meter reflects the algorithm (one
+    full-gradient phase per outer), not the reporting overhead.
+
+``evaluate(w, z_data, s0) -> (objective, optimality_norm)``
+    Defaults to :func:`make_same_iterate_eval`: f(w) from the margins
+    already in hand plus the optimality residual pairing z and w at the
+    SAME iterate (gradient norm for smooth g, prox gradient-mapping norm
+    otherwise).
+
+The harness owns the rng construction, wall-clock timing, and the
+:class:`RunResult`/:class:`OuterRecord` history schema, so every method —
+serial, FD-SVRG (metered sim, worker simulation, shard_map), DSVRG, and
+the parameter-server baselines — reports identically and a new scenario
+is a one-place change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses as losses_lib
+from repro.dist import Collectives, CommMeter
+
+
+@dataclasses.dataclass
+class OuterRecord:
+    outer: int
+    objective: float
+    grad_norm: float
+    comm_scalars: int
+    comm_rounds: int
+    modeled_time_s: float
+    wall_time_s: float
+
+
+@dataclasses.dataclass
+class RunResult:
+    w: jax.Array
+    history: list[OuterRecord]
+    meter: CommMeter
+
+    def objectives(self) -> np.ndarray:
+        return np.array([h.objective for h in self.history])
+
+    def final_objective(self) -> float:
+        return self.history[-1].objective
+
+
+# ---------------------------------------------------------------------------
+# Same-iterate reporting (objective from cached margins, optimality residual)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name"))
+def _objective_from_margins_impl(s, labels, w, lam, lam2, loss_name, reg_name):
+    loss = losses_lib.LOSSES[loss_name]
+    reg = losses_lib.Regularizer(reg_name, lam, lam2)
+    return jnp.mean(loss.value(s, labels)) + reg.value(w)
+
+
+def objective_from_margins(
+    s: jax.Array,
+    labels: jax.Array,
+    w: jax.Array,
+    loss: losses_lib.MarginLoss,
+    reg: losses_lib.Regularizer,
+) -> float:
+    """Objective at ``w`` given the margins ``s = w^T x_i`` already in hand
+    (the snapshot computes them anyway — no point paying a second
+    O(N·nnz) sweep just to report f(w))."""
+    return float(
+        _objective_from_margins_impl(
+            s, labels, w, reg.lam, reg.lam2, loss.name, reg.name
+        )
+    )
+
+
+def optimality_norm(
+    z_data: jax.Array,
+    w: jax.Array,
+    reg: losses_lib.Regularizer,
+    eta: float,
+) -> float:
+    """First-order optimality residual at ``w``, given the data gradient
+    ``z_data = (1/N) sum_i phi'(w^T x_i, y_i) x_i`` computed **at the same
+    w** (not a stale snapshot).
+
+    Smooth g: the plain gradient norm ``||z_data + grad g(w)||``.
+    Nonsmooth g (l1 / elastic_net): the prox gradient-mapping norm
+    ``||(w - prox_{eta*g}(w - eta * grad f(w))) / eta||`` — the standard
+    composite-optimality measure, which specializes to the gradient norm
+    when the prox is the identity.  Both vanish exactly at a minimizer.
+    """
+    if reg.is_smooth:
+        return float(jnp.linalg.norm(z_data + reg.grad(w)))
+    v = reg.prox(w - eta * (z_data + reg.smooth_grad(w)), eta)
+    return float(jnp.linalg.norm((w - v) / eta))
+
+
+def make_same_iterate_eval(
+    labels: jax.Array,
+    loss: losses_lib.MarginLoss,
+    reg: losses_lib.Regularizer,
+    eta: float,
+) -> Callable:
+    """The standard ``evaluate`` hook: objective from the snapshot margins,
+    optimality residual from the snapshot gradient — z, s0, and w all at
+    the post-epoch iterate."""
+
+    def evaluate(w, z_data, s0):
+        obj = objective_from_margins(s0, labels, w, loss, reg)
+        return obj, optimality_norm(z_data, w, reg, eta)
+
+    return evaluate
+
+
+# ---------------------------------------------------------------------------
+# Sample / option-mask drawing (one rng-stream convention for all drivers)
+# ---------------------------------------------------------------------------
+
+
+def draw_samples(rng: np.random.Generator, n: int, m: int, u: int) -> np.ndarray:
+    """M mini-batches of u uniform instance ids (the paper's sampling)."""
+    return rng.integers(0, n, size=(m, u), dtype=np.int64).astype(np.int32)
+
+
+def option_mask(rng: np.random.Generator, m: int, option: str) -> np.ndarray:
+    """Step mask: Option I runs all M steps (and draws nothing from the
+    rng); Option II stops at a uniform random step."""
+    if option == "I":
+        return np.ones(m, dtype=np.float32)
+    stop = int(rng.integers(1, m + 1))
+    return (np.arange(m) < stop).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+def run_outer_loop(
+    *,
+    outer_iters: int,
+    seed: int,
+    init_w: jax.Array,
+    snapshot: Callable,
+    epoch: Callable,
+    evaluate: Callable,
+    backend: Collectives | None = None,
+) -> RunResult:
+    """Run ``outer_iters`` outer iterations with snapshot rotation.
+
+    Sequence per outer t: ``epoch`` consumes the current snapshot
+    (z, s0) — the full gradient at the iterate entering the epoch — then
+    ``snapshot`` recomputes at the post-epoch iterate, which is both the
+    next outer's snapshot and the same-iterate pair ``evaluate`` reports
+    from.  ``backend=None`` means no communication (the serial path):
+    the history records zero scalars/rounds/modeled time against a fresh
+    empty meter.
+    """
+    rng = np.random.default_rng(seed)
+    w = init_w
+    meter = backend.meter if backend is not None else CommMeter()
+    history: list[OuterRecord] = []
+    t_start = time.perf_counter()
+    z_data, s0 = snapshot(w)  # outer-0 snapshot
+    for t in range(outer_iters):
+        w = epoch(t, rng, w, z_data, s0)
+        # Rotation: the post-epoch full gradient is next outer's snapshot
+        # and this record's diagnostic pair (z and w at the SAME iterate).
+        z_data, s0 = snapshot(w)
+        obj, gnorm = evaluate(w, z_data, s0)
+        history.append(
+            OuterRecord(
+                t,
+                obj,
+                gnorm,
+                meter.total_scalars,
+                meter.total_rounds,
+                backend.modeled_time_s if backend is not None else 0.0,
+                time.perf_counter() - t_start,
+            )
+        )
+    return RunResult(w=w, history=history, meter=meter)

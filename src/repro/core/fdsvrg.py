@@ -8,11 +8,17 @@ Three implementations, one update rule:
 * :func:`run_fdsvrg` — Algorithm 1 at simulation level: numerics follow
   the feature-decomposed computation (margins as a sum of per-block
   partials), communication is metered with the paper's exact accounting
-  (tree reduce+broadcast per inner product), wall-clock is modeled with
-  :class:`~repro.core.comm.ClusterModel`.
+  and modeled time is charged from the shared closed forms
+  (:data:`repro.dist.COSTS`).
 * :func:`fdsvrg_worker_simulation` — an explicit q-worker object-level
   simulation (each worker only ever touches its own ``w^(l)`` and
   ``D^(l)``); slow, used by tests to certify exact equivalence.
+
+All three drivers run on the ONE outer-loop engine
+(:func:`repro.core.driver.run_outer_loop`): snapshot rotation, sample
+drawing, same-iterate reporting, and history construction live there,
+not here — each implementation supplies only its ``snapshot`` and
+``epoch`` hooks.
 
 All three run on the block-local layout
 (:class:`repro.data.block_csr.BlockCSR`): each worker's rows carry only
@@ -38,16 +44,23 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import losses as losses_lib
+from repro.core.driver import (
+    OuterRecord,
+    RunResult,
+    draw_samples,
+    make_same_iterate_eval,
+    objective_from_margins,
+    optimality_norm,
+    option_mask,
+    run_outer_loop,
+)
 from repro.core.partition import FeaturePartition, balanced
-from repro.dist import ClusterModel, Collectives, CommMeter, SimBackend, tree_order_sum
+from repro.dist import COSTS, ClusterModel, Collectives, SimBackend, tree_order_sum
 from repro.data.sparse import PaddedCSR, margins_rows, scatter_grad
 from repro.data.block_csr import BlockCSR, local_margins, local_scatter
 from repro.kernels import ops
@@ -67,30 +80,6 @@ class SVRGConfig:
             raise ValueError(f"option must be 'I' or 'II', got {self.option!r}")
         if self.batch_size < 1:
             raise ValueError("batch_size >= 1 required")
-
-
-@dataclasses.dataclass
-class OuterRecord:
-    outer: int
-    objective: float
-    grad_norm: float
-    comm_scalars: int
-    comm_rounds: int
-    modeled_time_s: float
-    wall_time_s: float
-
-
-@dataclasses.dataclass
-class RunResult:
-    w: jax.Array
-    history: list[OuterRecord]
-    meter: CommMeter
-
-    def objectives(self) -> np.ndarray:
-        return np.array([h.objective for h in self.history])
-
-    def final_objective(self) -> float:
-        return self.history[-1].objective
 
 
 # ---------------------------------------------------------------------------
@@ -117,30 +106,6 @@ def objective(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("loss_name", "reg_name"))
-def _objective_from_margins_impl(s, labels, w, lam, lam2, loss_name, reg_name):
-    loss = losses_lib.LOSSES[loss_name]
-    reg = losses_lib.Regularizer(reg_name, lam, lam2)
-    return jnp.mean(loss.value(s, labels)) + reg.value(w)
-
-
-def objective_from_margins(
-    s: jax.Array,
-    labels: jax.Array,
-    w: jax.Array,
-    loss: losses_lib.MarginLoss,
-    reg: losses_lib.Regularizer,
-) -> float:
-    """Objective at ``w`` given the margins ``s = w^T x_i`` already in hand
-    (the drivers' post-epoch full gradient computes them anyway — no point
-    paying a second O(N·nnz) sweep just to report f(w))."""
-    return float(
-        _objective_from_margins_impl(
-            s, labels, w, reg.lam, reg.lam2, loss.name, reg.name
-        )
-    )
-
-
 @functools.partial(jax.jit, static_argnames=("loss_name",))
 def _full_grad_impl(indices, values, labels, w, loss_name):
     """Data part of the full gradient plus the cached margins s0 = w^T x_i."""
@@ -155,28 +120,6 @@ def full_gradient(
     data: PaddedCSR, w: jax.Array, loss: losses_lib.MarginLoss
 ) -> tuple[jax.Array, jax.Array]:
     return _full_grad_impl(data.indices, data.values, data.labels, w, loss.name)
-
-
-def optimality_norm(
-    z_data: jax.Array,
-    w: jax.Array,
-    reg: losses_lib.Regularizer,
-    eta: float,
-) -> float:
-    """First-order optimality residual at ``w``, given the data gradient
-    ``z_data = (1/N) sum_i phi'(w^T x_i, y_i) x_i`` computed **at the same
-    w** (not a stale snapshot).
-
-    Smooth g: the plain gradient norm ``||z_data + grad g(w)||``.
-    Nonsmooth g (l1 / elastic_net): the prox gradient-mapping norm
-    ``||(w - prox_{eta*g}(w - eta * grad f(w))) / eta||`` — the standard
-    composite-optimality measure, which specializes to the gradient norm
-    when the prox is the identity.  Both vanish exactly at a minimizer.
-    """
-    if reg.is_smooth:
-        return float(jnp.linalg.norm(z_data + reg.grad(w)))
-    v = reg.prox(w - eta * (z_data + reg.smooth_grad(w)), eta)
-    return float(jnp.linalg.norm((w - v) / eta))
 
 
 # ---------------------------------------------------------------------------
@@ -229,15 +172,32 @@ def _full_grad_blocks(
     return z_data, s0
 
 
+def _kernel_lams(
+    reg: losses_lib.Regularizer, use_kernels: bool
+) -> tuple[float, float, float] | None:
+    """Static (smooth_lam, prox_l1, prox_l2) for the fused Pallas kernels
+    (compile-time constants of the run), or None on the jnp path — where
+    lam stays a traced operand so lambda sweeps reuse one compilation."""
+    if not use_kernels:
+        return None
+    return (reg.smooth_lam, reg.prox_l1, reg.prox_l2)
+
+
 # ---------------------------------------------------------------------------
 # Inner epoch (shared by serial and simulated-FD paths)
 # ---------------------------------------------------------------------------
 
 
+# lam stays traced (it only enters jnp arithmetic) so lambda sweeps reuse
+# one compiled scan — matching _async_epoch, which always traced it; lam2
+# is Python-branched in Regularizer.prox and must stay static.  The fused
+# Pallas kernels bake their lams in at compile time, so the kernel path
+# receives them separately as the static `kernel_lams` triple.
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "loss_name", "reg_name", "lam", "block_dims", "use_kernels", "lam2"
+        "loss_name", "reg_name", "block_dims", "use_kernels", "lam2",
+        "kernel_lams",
     ),
 )
 def _inner_epoch(
@@ -252,10 +212,11 @@ def _inner_epoch(
     step_mask,  # float32[M] (1 = apply update; Option II masks the tail)
     loss_name: str,
     reg_name: str,
-    lam: float,
+    lam,  # traced regularizer strength
     block_dims: tuple[int, ...],
     use_kernels: bool,
     lam2: float = 0.0,  # elastic-net L2 strength (trailing: legacy call sites)
+    kernel_lams: tuple[float, float, float] | None = None,
 ):
     """M proximal variance-reduced updates on the block-local layout.
 
@@ -269,8 +230,14 @@ def _inner_epoch(
     eq. 3: g decomposes over blocks), hence purely block-local — no extra
     communication relative to the L2 path.  ``len(block_dims) == 1`` is
     the serial path.  ``use_kernels`` swaps the gather-margin and the
-    scatter+prox-update for the fused Pallas kernels.
+    scatter+prox-update for the fused Pallas kernels and requires the
+    static ``kernel_lams`` triple (see :func:`_kernel_lams`).
     """
+    if use_kernels and kernel_lams is None:
+        raise ValueError(
+            "use_kernels=True requires kernel_lams=(smooth_lam, prox_l1, "
+            "prox_l2) — the fused kernels bake them in at compile time"
+        )
     loss = losses_lib.LOSSES[loss_name]
     reg = losses_lib.Regularizer(reg_name, lam, lam2)
     u = samples.shape[1]
@@ -302,10 +269,11 @@ def _inner_epoch(
             w_blk = jax.lax.slice_in_dim(w, bounds[l], bounds[l + 1])
             z_blk = jax.lax.slice_in_dim(z_data, bounds[l], bounds[l + 1])
             if use_kernels:
+                k_lam, k_l1, k_l2 = kernel_lams
                 new_blocks.append(
                     ops.fused_block_prox_update(
                         w_blk, idx, val, coef, z_blk, eta_m,
-                        lam=reg.smooth_lam, lam1=reg.prox_l1, lam2=reg.prox_l2,
+                        lam=k_lam, lam1=k_l1, lam2=k_l2,
                     )
                 )
             else:
@@ -317,17 +285,6 @@ def _inner_epoch(
 
     w_final, _ = jax.lax.scan(step, w0, (samples, step_mask))
     return w_final
-
-
-def _draw_samples(rng: np.random.Generator, n: int, m: int, u: int) -> np.ndarray:
-    return rng.integers(0, n, size=(m, u), dtype=np.int64).astype(np.int32)
-
-
-def _option_mask(rng: np.random.Generator, m: int, option: str) -> np.ndarray:
-    if option == "I":
-        return np.ones(m, dtype=np.float32)
-    stop = int(rng.integers(1, m + 1))
-    return (np.arange(m) < stop).astype(np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -346,50 +303,34 @@ def run_serial_svrg(
     # The q=1 BlockCSR shares the PaddedCSR arrays (local ids == global).
     block_data = BlockCSR.from_padded(data, balanced(data.dim, 1))
     block_dims = block_data.block_dims
-    rng = np.random.default_rng(cfg.seed)
-    w = jnp.zeros((data.dim,), dtype=data.values.dtype)
-    meter = CommMeter()  # serial: stays empty
-    history: list[OuterRecord] = []
-    t_start = time.perf_counter()
-    # Snapshot gradient for outer 0; thereafter each epoch's post-epoch
-    # gradient doubles as the next snapshot, so grad_norm is reported at
-    # the *post-epoch* iterate at the cost of one extra full gradient for
-    # the whole run (the historical code paired the snapshot z with the
-    # post-epoch w — a mixed-iterate quantity).
-    z_data, s0 = _full_grad_blocks(
-        block_data.indices, block_data.values, data.labels, w,
-        loss.name, block_dims, use_kernels,
-    )
-    for t in range(cfg.outer_iters):
-        samples = _draw_samples(rng, data.num_instances, cfg.inner_steps, cfg.batch_size)
-        mask = _option_mask(rng, cfg.inner_steps, cfg.option)
-        w = _inner_epoch(
-            block_data.indices,
-            block_data.values,
-            data.labels,
-            w,
-            z_data,
-            s0,
-            jnp.asarray(samples),
-            cfg.eta,
-            jnp.asarray(mask),
-            loss.name,
-            reg.name,
-            reg.lam,
-            block_dims,
-            use_kernels,
-            lam2=reg.lam2,
-        )
-        z_data, s0 = _full_grad_blocks(
+    kernel_lams = _kernel_lams(reg, use_kernels)
+
+    def snapshot(w):
+        return _full_grad_blocks(
             block_data.indices, block_data.values, data.labels, w,
             loss.name, block_dims, use_kernels,
         )
-        obj = objective_from_margins(s0, data.labels, w, loss, reg)
-        gnorm = optimality_norm(z_data, w, reg, cfg.eta)
-        history.append(
-            OuterRecord(t, obj, gnorm, 0, 0, 0.0, time.perf_counter() - t_start)
+
+    def epoch(t, rng, w, z_data, s0):
+        samples = draw_samples(rng, data.num_instances, cfg.inner_steps,
+                               cfg.batch_size)
+        mask = option_mask(rng, cfg.inner_steps, cfg.option)
+        return _inner_epoch(
+            block_data.indices, block_data.values, data.labels,
+            w, z_data, s0,
+            jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
+            loss.name, reg.name, reg.lam, block_dims, use_kernels,
+            lam2=reg.lam2, kernel_lams=kernel_lams,
         )
-    return RunResult(w=w, history=history, meter=meter)
+
+    return run_outer_loop(
+        outer_iters=cfg.outer_iters,
+        seed=cfg.seed,
+        init_w=jnp.zeros((data.dim,), dtype=data.values.dtype),
+        snapshot=snapshot,
+        epoch=epoch,
+        evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -417,7 +358,8 @@ def run_fdsvrg(
     :class:`~repro.data.block_csr.BlockCSR` layout (built once here, or
     passed in as ``block_data`` to amortize across runs).
     Communication/time: the paper's accounting, metered through
-    ``backend`` (default: a fresh ``SimBackend``) —
+    ``backend`` (default: a fresh ``SimBackend``) with the shared §4.5
+    closed forms (:data:`repro.dist.COSTS`) —
 
       outer t:  tree reduce+broadcast of the N-vector  w_t^T D  -> 2qN scalars
       inner m:  tree reduce+broadcast of u margins      -> 2qu scalars
@@ -435,86 +377,47 @@ def run_fdsvrg(
     elif block_data.partition.bounds != partition.bounds:
         raise ValueError("block_data was built for a different partition")
     block_dims = block_data.block_dims
-    rng = np.random.default_rng(cfg.seed)
-    w = jnp.zeros((data.dim,), dtype=data.values.dtype)
-    history: list[OuterRecord] = []
-    n = data.num_instances
-    nnz = data.nnz_max
-    log_rounds = backend.tree_rounds
-    t_start = time.perf_counter()
+    kernel_lams = _kernel_lams(reg, use_kernels)
+    n, u, nnz = data.num_instances, cfg.batch_size, data.nnz_max
 
-    # Snapshot gradient for outer 0; each epoch's post-epoch gradient below
-    # doubles as the next snapshot, so grad_norm is reported at the
-    # post-epoch iterate with only one extra full gradient for the run.
-    z_data, s0 = _full_grad_blocks(
-        block_data.indices, block_data.values, data.labels, w,
-        loss.name, block_dims, use_kernels,
-    )
-    for t in range(cfg.outer_iters):
-        # --- full-gradient phase (Alg 1 lines 3-5): account the snapshot
-        # gradient this outer iteration consumes ---
-        backend.meter_tree(payload=n)  # w_t^T D summed across blocks
-        # per-worker compute: margins over the local block (N*nnz/q flops-ish)
-        # + local scatter of the full gradient.
-        backend.charge(
-            flops=2.0 * n * nnz / q * 2,  # margins + scatter
-            scalars=2 * q * n,
-            rounds=log_rounds,
-        )
-
-        samples = _draw_samples(rng, n, cfg.inner_steps, cfg.batch_size)
-        mask = _option_mask(rng, cfg.inner_steps, cfg.option)
-        w = _inner_epoch(
-            block_data.indices,
-            block_data.values,
-            data.labels,
-            w,
-            z_data,
-            s0,
-            jnp.asarray(samples),
-            cfg.eta,
-            jnp.asarray(mask),
-            loss.name,
-            reg.name,
-            reg.lam,
-            block_dims,
-            use_kernels,
-            lam2=reg.lam2,
-        )
-        # --- inner-loop communication (Alg 1 lines 9-11): one tree round
-        # per mini-batch of u margins; M steps total (metered in aggregate).
-        backend.meter_tree(payload=cfg.batch_size, steps=cfg.inner_steps)
-        # Dense-update compute per worker: O(d/q) per step for the z + reg
-        # part plus O(nnz) for the sparse part.
-        backend.charge_seconds(
-            cfg.inner_steps
-            * backend.cluster.time(
-                critical_flops=2.0 * (data.dim / q + cfg.batch_size * nnz),
-                critical_scalars=2 * q * cfg.batch_size,
-                rounds=log_rounds,
-            )
-        )
-
-        # Post-epoch gradient: next outer's snapshot AND the diagnostic
-        # pair for this record (z, s0, and w at the same iterate).
-        z_data, s0 = _full_grad_blocks(
+    def snapshot(w):
+        return _full_grad_blocks(
             block_data.indices, block_data.values, data.labels, w,
             loss.name, block_dims, use_kernels,
         )
-        obj = objective_from_margins(s0, data.labels, w, loss, reg)
-        gnorm = optimality_norm(z_data, w, reg, cfg.eta)
-        history.append(
-            OuterRecord(
-                t,
-                obj,
-                gnorm,
-                backend.meter.total_scalars,
-                backend.meter.total_rounds,
-                backend.modeled_time_s,
-                time.perf_counter() - t_start,
-            )
+
+    def epoch(t, rng, w, z_data, s0):
+        # --- full-gradient phase (Alg 1 lines 3-5): account the snapshot
+        # gradient this outer iteration consumes ---
+        backend.meter_tree(payload=n)
+        backend.charge_cost(COSTS.fd_fullgrad(n=n, nnz=nnz, q=q))
+
+        samples = draw_samples(rng, n, cfg.inner_steps, u)
+        mask = option_mask(rng, cfg.inner_steps, cfg.option)
+        w = _inner_epoch(
+            block_data.indices, block_data.values, data.labels,
+            w, z_data, s0,
+            jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
+            loss.name, reg.name, reg.lam, block_dims, use_kernels,
+            lam2=reg.lam2, kernel_lams=kernel_lams,
         )
-    return RunResult(w=w, history=history, meter=backend.meter)
+        # --- inner-loop communication (Alg 1 lines 9-11): one tree round
+        # per mini-batch of u margins; M steps total (metered in aggregate).
+        backend.meter_tree(payload=u, steps=cfg.inner_steps)
+        backend.charge_cost(
+            COSTS.fd_inner_step(nnz=nnz, q=q, u=u), steps=cfg.inner_steps
+        )
+        return w
+
+    return run_outer_loop(
+        outer_iters=cfg.outer_iters,
+        seed=cfg.seed,
+        init_w=jnp.zeros((data.dim,), dtype=data.values.dtype),
+        snapshot=snapshot,
+        epoch=epoch,
+        evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
+        backend=backend,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -560,43 +463,55 @@ def fdsvrg_worker_simulation(
     backend: Collectives | None = None,
     *,
     use_kernels: bool = False,
-) -> tuple[jax.Array, CommMeter]:
-    """Object-level Algorithm 1: a list of per-worker states, every
-    cross-worker scalar passes through ``backend.all_reduce`` (default: a
-    fresh ``SimBackend`` running the explicit Figure-5 schedule).  Each
-    worker holds only its block-local CSR shard and its ``w^(l)``.
+) -> RunResult:
+    """Object-level Algorithm 1: a list of per-worker states; every
+    inner-loop cross-worker scalar passes through ``backend.all_reduce``
+    (default: a fresh ``SimBackend`` running the explicit Figure-5 message
+    schedule), and the full-gradient tree is accounted in aggregate via
+    ``meter_tree`` (its value comes from the harness snapshot — the same
+    canonical tree-order sum, metered once per outer like every driver).
+    Each worker holds only its block-local CSR shard and its ``w^(l)``.
 
-    Returns the concatenated final parameter and the backend's comm meter.
-    Deliberately step-by-step and slow — this is the executable spec, and
-    the vehicle for the backend-equivalence tests.
+    Returns a full :class:`~repro.core.driver.RunResult` (same history
+    schema as every driver; the meter is the backend's).  Deliberately
+    step-by-step and slow — this is the executable spec, and the vehicle
+    for the backend-equivalence tests.
     """
     q = partition.num_blocks
     backend = backend or SimBackend(q)
     block_data = BlockCSR.from_padded(data, partition)
-    rng = np.random.default_rng(cfg.seed)
+    block_dims = block_data.block_dims
+    bounds = _bounds(block_dims)
     n = data.num_instances
 
-    # Worker state: w^(l)
-    blocks = [
-        jnp.zeros((dl,), dtype=data.values.dtype) for dl in block_data.block_dims
-    ]
+    def split(w):
+        return [w[bounds[l]:bounds[l + 1]] for l in range(q)]
 
-    for t in range(cfg.outer_iters):
-        # Lines 3-4: each worker computes w_t^(l)T D^(l); tree-sum the N-vector.
+    def snapshot(w):
+        # Lines 3-4 compute-side: per-worker partial margins, canonical
+        # tree-order sum (bit-identical to every backend's all_reduce);
+        # line 5: purely local scatter of the full-gradient block.
+        blocks = split(w)
         partials = [
             _sim_margins(*block_data.block(l), blocks[l], use_kernels)
             for l in range(q)
         ]
-        s0 = backend.all_reduce(partials, payload=n)
-        # Line 5: local full-gradient block from the shared margins.
+        s0 = tree_order_sum(partials)
         coeffs0 = loss.dvalue(s0, data.labels) / n
         z_blocks = [
-            _sim_scatter(*block_data.block(l), coeffs0, block_data.block_dims[l])
+            _sim_scatter(*block_data.block(l), coeffs0, block_dims[l])
             for l in range(q)
         ]
+        z_data = jnp.concatenate(z_blocks) if q > 1 else z_blocks[0]
+        return z_data, s0
 
-        samples = _draw_samples(rng, n, cfg.inner_steps, cfg.batch_size)
-        mask = _option_mask(rng, cfg.inner_steps, cfg.option)
+    def epoch(t, rng, w, z_data, s0):
+        # Account the full-gradient tree this outer consumed (lines 3-4).
+        backend.meter_tree(payload=n)
+        blocks = split(w)
+        z_blocks = split(z_data)
+        samples = draw_samples(rng, n, cfg.inner_steps, cfg.batch_size)
+        mask = option_mask(rng, cfg.inner_steps, cfg.option)
 
         for m in range(cfg.inner_steps):
             ids = samples[m]
@@ -621,5 +536,14 @@ def fdsvrg_worker_simulation(
                     blocks[l], rows[l][0], rows[l][1], coef, z_blocks[l],
                     eta_m, reg.name, reg.lam, use_kernels, lam2=reg.lam2,
                 )
+        return jnp.concatenate(blocks) if q > 1 else blocks[0]
 
-    return jnp.concatenate(blocks), backend.meter
+    return run_outer_loop(
+        outer_iters=cfg.outer_iters,
+        seed=cfg.seed,
+        init_w=jnp.zeros((data.dim,), dtype=data.values.dtype),
+        snapshot=snapshot,
+        epoch=epoch,
+        evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
+        backend=backend,
+    )

@@ -8,9 +8,7 @@ layout (:meth:`repro.data.block_csr.BlockCSR.stacked`): a ``[q, N, B]``
 stack of per-block re-indexed padded rows, sharded on the leading axis,
 so each worker holds only its own block's entries with LOCAL feature ids
 and ``B ≈ nnz_max / q``.  That is the paper's construction verbatim —
-worker l stores the feature *slice* of every instance — and it kills the
-masked global-row fallback this module used to carry: no membership
-compares, no id rebasing, O(nnz_max/q) gather/scatter work per chip.
+worker l stores the feature *slice* of every instance.
 
 Communication per inner step is exactly one all-reduce of ``u`` scalars
 over the feature axes — the hardware tree standing in for Figure 5.  The
@@ -28,34 +26,52 @@ through the fused Pallas kernels (:mod:`repro.kernels`), interpret-mode
 off-TPU; ``False`` is the jnp numerics oracle — bit-identical in
 interpret mode.
 
+Two granularities of compiled step:
+
+* :func:`make_fullgrad` + :func:`make_inner_epoch` — the snapshot and
+  epoch halves :func:`run_fdsvrg_sharded` plugs into the shared
+  outer-loop harness (:func:`repro.core.driver.run_outer_loop`), so the
+  deployable path reports the same :class:`~repro.core.driver.RunResult`
+  schema — objective, same-iterate optimality residual, metered scalars,
+  modeled time — as every other driver, in the data's dtype.
+* :func:`make_outer_iteration` — both phases fused into one jittable
+  call (the AOT/perf shape; ``launch/dryrun`` and ``launch/perf``
+  compile this one).
+
 On-device traffic cannot be observed from traced code, so
-:func:`run_fdsvrg_sharded` meters the closed forms host-side through the
-backend — the same accounting, the same meter, and (since it also charges
-the same compute terms) the same modeled time as the simulation paths.
+:func:`run_fdsvrg_sharded` meters host-side through the backend with the
+shared §4.5 closed forms (:data:`repro.dist.COSTS`) — the same
+accounting, the same meter, and therefore the same modeled time as the
+simulation driver (asserted in tests).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import losses as losses_lib
+from repro.core.driver import (
+    draw_samples,
+    make_same_iterate_eval,
+    run_outer_loop,
+)
 from repro.core.partition import balanced
 from repro.data.block_csr import BlockCSR, local_margins, local_scatter
-from repro.dist import ClusterModel, ShardMapBackend
+from repro.dist import COSTS, ClusterModel, ShardMapBackend
 from repro.kernels import ops
 
 
 def _opt_residual_blk(reg, eta, w_blk, z_blk):
     """Block-local optimality residual: the gradient for smooth g, the
-    prox gradient mapping otherwise (see repro.core.fdsvrg.optimality_norm
-    — this is its per-block body; callers psum the squares)."""
+    prox gradient mapping otherwise (the per-block body of
+    repro.core.driver.optimality_norm; callers psum the squares).  Only
+    the fused AOT step reports it — the harness driver evaluates
+    host-side like everyone else."""
     if reg.is_smooth:
         return z_blk + reg.grad(w_blk)
     v_blk = reg.prox(w_blk - eta * (z_blk + reg.smooth_grad(w_blk)), eta)
@@ -78,13 +94,138 @@ class FDSVRGShardedConfig:
     use_kernels: bool = False
 
 
+def _resolve_backend(
+    mesh: Mesh,
+    cfg: FDSVRGShardedConfig,
+    feature_axes: Sequence[str],
+    backend: ShardMapBackend | None,
+) -> tuple[ShardMapBackend, int]:
+    """Shared builder plumbing: backend/mesh consistency + block size."""
+    if backend is None:
+        backend = ShardMapBackend(
+            mesh=mesh, feature_axes=feature_axes, tree_mode=cfg.tree_mode
+        )
+    elif backend.mesh is not mesh or backend.feature_axes != tuple(feature_axes):
+        raise ValueError(
+            "backend was built on a different mesh/feature_axes than the ones "
+            "passed to the step builder"
+        )
+    q = backend.q
+    if cfg.dim % q != 0:
+        raise ValueError(f"dim {cfg.dim} must divide by q={q} (pad features)")
+    return backend, cfg.dim // q
+
+
+def _margin_of(cfg: FDSVRGShardedConfig, w_b, idx, val):
+    if cfg.use_kernels:
+        return ops.sparse_margins(idx, val, w_b)
+    return local_margins(idx, val, w_b)
+
+
+def _fullgrad_blk(cfg, backend, loss, block, w_blk, bidx, bval, labels):
+    """Full-gradient phase on one worker (Alg 1 lines 3-5): one N-vector
+    all-reduce, then a purely block-local scatter."""
+    partial = _margin_of(cfg, w_blk, bidx, bval)
+    s0 = backend.device_all_reduce(partial)
+    coeffs = loss.dvalue(s0, labels) / labels.shape[0]
+    z_blk = local_scatter(bidx, bval, coeffs, block)
+    return z_blk, s0
+
+
+def _inner_scan_blk(cfg, backend, loss, reg, block,
+                    w_blk, z_blk, s0, bidx, bval, labels, samples):
+    """M inner steps on one worker: one u-scalar all-reduce per step; the
+    prox is elementwise on the local block, so the traffic is identical
+    for every regularizer."""
+
+    def step(w_b, ids):
+        idx = bidx[ids]
+        val = bval[ids]
+        y = labels[ids]
+        partial = _margin_of(cfg, w_b, idx, val)
+        s_m = backend.device_all_reduce(partial)
+        coef = (loss.dvalue(s_m, y) - loss.dvalue(s0[ids], y)) / cfg.batch_size
+        if cfg.use_kernels:
+            w_next = ops.fused_block_prox_update(
+                w_b, idx, val, coef, z_blk, cfg.eta,
+                lam=reg.smooth_lam, lam1=reg.prox_l1, lam2=reg.prox_l2,
+            )
+        else:
+            g = local_scatter(idx, val, coef, block) + z_blk + reg.smooth_grad(w_b)
+            w_next = reg.prox(w_b - cfg.eta * g, cfg.eta)
+        return w_next, None
+
+    w_blk, _ = jax.lax.scan(step, w_blk, samples)
+    return w_blk
+
+
+def make_fullgrad(
+    mesh: Mesh,
+    cfg: FDSVRGShardedConfig,
+    feature_axes: Sequence[str] = ("data", "model"),
+    backend: ShardMapBackend | None = None,
+):
+    """Build the jittable snapshot half: ``(w, block_indices,
+    block_values, labels) -> (z, s0)`` with ``z`` feature-sharded like
+    ``w`` and ``s0`` (the margins at ``w``) replicated.  This is the
+    harness ``snapshot`` hook — its output rotates into the next epoch
+    AND carries the same-iterate reporting pair."""
+    backend, block = _resolve_backend(mesh, cfg, feature_axes, backend)
+    loss = losses_lib.LOSSES[cfg.loss_name]
+    axes = backend.feature_axes
+
+    def worker(w_blk, bidx, bval, labels):
+        z_blk, s0 = _fullgrad_blk(
+            cfg, backend, loss, block, w_blk, bidx[0], bval[0], labels
+        )
+        return z_blk, s0
+
+    spec_rows = P(axes, None, None)
+    mapped = backend.shard_map(
+        worker,
+        in_specs=(P(axes), spec_rows, spec_rows, P(None)),
+        out_specs=(P(axes), P(None)),
+    )
+    return jax.jit(mapped)
+
+
+def make_inner_epoch(
+    mesh: Mesh,
+    cfg: FDSVRGShardedConfig,
+    feature_axes: Sequence[str] = ("data", "model"),
+    backend: ShardMapBackend | None = None,
+):
+    """Build the jittable epoch half: ``(w, z, s0, block_indices,
+    block_values, labels, samples) -> w_next`` — the M-step inner scan
+    consuming a snapshot produced by :func:`make_fullgrad`."""
+    backend, block = _resolve_backend(mesh, cfg, feature_axes, backend)
+    loss = losses_lib.LOSSES[cfg.loss_name]
+    reg = losses_lib.Regularizer(cfg.reg_name, cfg.lam, cfg.lam2)
+    axes = backend.feature_axes
+
+    def worker(w_blk, z_blk, s0, bidx, bval, labels, samples):
+        return _inner_scan_blk(
+            cfg, backend, loss, reg, block,
+            w_blk, z_blk, s0, bidx[0], bval[0], labels, samples,
+        )
+
+    spec_rows = P(axes, None, None)
+    mapped = backend.shard_map(
+        worker,
+        in_specs=(P(axes), P(axes), P(None), spec_rows, spec_rows,
+                  P(None), P(None, None)),
+        out_specs=P(axes),
+    )
+    return jax.jit(mapped)
+
+
 def make_outer_iteration(
     mesh: Mesh,
     cfg: FDSVRGShardedConfig,
     feature_axes: Sequence[str] = ("data", "model"),
     backend: ShardMapBackend | None = None,
 ):
-    """Build the jittable one-outer-iteration function.
+    """Build the fused one-outer-iteration function (the AOT/perf shape).
 
     Signature of the returned fn:
       (w, block_indices, block_values, labels, samples)
@@ -96,23 +237,14 @@ def make_outer_iteration(
       labels:        P(None)
       samples:       P(None, None)          int32[M, u]
 
-    Build the data stack once with
-    ``BlockCSR.from_padded(data, balanced(dim, q)).stacked()`` (or let
-    :func:`run_fdsvrg_sharded` do it).
+    ``full_grad_norm`` is the optimality residual at the *snapshot*
+    iterate (the full-gradient phase computes it for free); the harness
+    driver (:func:`run_fdsvrg_sharded`) reports post-epoch residuals
+    instead, via the split :func:`make_fullgrad` / :func:`make_inner_epoch`
+    pair.  Build the data stack once with
+    ``BlockCSR.from_padded(data, balanced(dim, q)).stacked()``.
     """
-    if backend is None:
-        backend = ShardMapBackend(
-            mesh=mesh, feature_axes=feature_axes, tree_mode=cfg.tree_mode
-        )
-    elif backend.mesh is not mesh or backend.feature_axes != tuple(feature_axes):
-        raise ValueError(
-            "backend was built on a different mesh/feature_axes than the ones "
-            "passed to make_outer_iteration"
-        )
-    q = backend.q
-    if cfg.dim % q != 0:
-        raise ValueError(f"dim {cfg.dim} must divide by q={q} (pad features)")
-    block = cfg.dim // q
+    backend, block = _resolve_backend(mesh, cfg, feature_axes, backend)
     loss = losses_lib.LOSSES[cfg.loss_name]
     reg = losses_lib.Regularizer(cfg.reg_name, cfg.lam, cfg.lam2)
     axes = backend.feature_axes
@@ -120,45 +252,16 @@ def make_outer_iteration(
     def worker(w_blk, bidx, bval, labels, samples):
         bidx = bidx[0]  # [N, B]: the leading q-axis shards to size 1
         bval = bval[0]
-
-        def margin_of(w_b, idx, val):
-            if cfg.use_kernels:
-                return ops.sparse_margins(idx, val, w_b)
-            return local_margins(idx, val, w_b)
-
-        # ---- full-gradient phase: one N-vector all-reduce ----
-        partial_s0 = margin_of(w_blk, bidx, bval)  # [N]
-        s0 = backend.device_all_reduce(partial_s0)
-        coeffs0 = loss.dvalue(s0, labels) / labels.shape[0]
-        z_blk = local_scatter(bidx, bval, coeffs0, block)
-        # Optimality residual at the snapshot (z and w at the SAME
-        # iterate — the driver reports the post-epoch value via
-        # make_optimality_eval instead, matching the other drivers).
+        z_blk, s0 = _fullgrad_blk(
+            cfg, backend, loss, block, w_blk, bidx, bval, labels
+        )
         gnorm_sq = jax.lax.psum(
             jnp.sum(_opt_residual_blk(reg, cfg.eta, w_blk, z_blk) ** 2), axes
         )
-
-        # ---- inner loop: one u-scalar all-reduce per step; the prox is
-        # elementwise on the local block, so the traffic is identical for
-        # every regularizer ----
-        def step(w_b, ids):
-            idx = bidx[ids]
-            val = bval[ids]
-            y = labels[ids]
-            partial = margin_of(w_b, idx, val)
-            s_m = backend.device_all_reduce(partial)
-            coef = (loss.dvalue(s_m, y) - loss.dvalue(s0[ids], y)) / cfg.batch_size
-            if cfg.use_kernels:
-                w_next = ops.fused_block_prox_update(
-                    w_b, idx, val, coef, z_blk, cfg.eta,
-                    lam=reg.smooth_lam, lam1=reg.prox_l1, lam2=reg.prox_l2,
-                )
-            else:
-                g = local_scatter(idx, val, coef, block) + z_blk + reg.smooth_grad(w_b)
-                w_next = reg.prox(w_b - cfg.eta * g, cfg.eta)
-            return w_next, None
-
-        w_blk, _ = jax.lax.scan(step, w_blk, samples)
+        w_blk = _inner_scan_blk(
+            cfg, backend, loss, reg, block,
+            w_blk, z_blk, s0, bidx, bval, labels, samples,
+        )
         return w_blk, gnorm_sq
 
     spec_w = P(axes)
@@ -177,60 +280,6 @@ def make_outer_iteration(
     return outer_iteration
 
 
-def make_optimality_eval(
-    mesh: Mesh,
-    cfg: FDSVRGShardedConfig,
-    feature_axes: Sequence[str] = ("data", "model"),
-    backend: ShardMapBackend | None = None,
-):
-    """Jittable ``(w, block_indices, block_values, labels) -> gnorm``: the
-    full-gradient phase (one N-vector all-reduce, block-local scatter)
-    without an inner epoch, reduced to the optimality-residual norm at
-    ``w``.  The driver uses it to report ``grad_norm`` at the
-    **post-epoch** iterate — z and w from the same point, like every
-    other driver — for the final history record (earlier records reuse
-    the next outer's snapshot residual), i.e. one extra full-gradient
-    phase per run (a diagnostic; not metered as algorithm traffic)."""
-    if backend is None:
-        backend = ShardMapBackend(
-            mesh=mesh, feature_axes=feature_axes, tree_mode=cfg.tree_mode
-        )
-    q = backend.q
-    if cfg.dim % q != 0:
-        raise ValueError(f"dim {cfg.dim} must divide by q={q} (pad features)")
-    block = cfg.dim // q
-    loss = losses_lib.LOSSES[cfg.loss_name]
-    reg = losses_lib.Regularizer(cfg.reg_name, cfg.lam, cfg.lam2)
-    axes = backend.feature_axes
-
-    def worker(w_blk, bidx, bval, labels):
-        bidx = bidx[0]
-        bval = bval[0]
-        if cfg.use_kernels:
-            partial = ops.sparse_margins(bidx, bval, w_blk)
-        else:
-            partial = local_margins(bidx, bval, w_blk)
-        s = backend.device_all_reduce(partial)
-        coeffs = loss.dvalue(s, labels) / labels.shape[0]
-        z_blk = local_scatter(bidx, bval, coeffs, block)
-        return jax.lax.psum(
-            jnp.sum(_opt_residual_blk(reg, cfg.eta, w_blk, z_blk) ** 2), axes
-        )
-
-    spec_rows = P(axes, None, None)
-    mapped = backend.shard_map(
-        worker,
-        in_specs=(P(axes), spec_rows, spec_rows, P(None)),
-        out_specs=P(),
-    )
-
-    @jax.jit
-    def gnorm_at(w, block_indices, block_values, labels):
-        return jnp.sqrt(mapped(w, block_indices, block_values, labels))
-
-    return gnorm_at
-
-
 def run_fdsvrg_sharded(
     data,
     mesh: Mesh,
@@ -241,75 +290,59 @@ def run_fdsvrg_sharded(
     cluster: ClusterModel | None = None,
     backend: ShardMapBackend | None = None,
 ):
-    """Metered driver for the deployable path.
+    """Metered driver for the deployable path, on the shared harness.
 
     Re-indexes ``data`` (a PaddedCSR) into the block-local stacked layout
-    for the mesh's q workers, runs ``outer_iters`` outer iterations of
-    :func:`make_outer_iteration`, and meters the closed-form traffic —
-    one N-payload tree per outer plus one u-payload tree per inner step —
-    through the backend, so the shard_map path reports bytes-on-the-wire
-    from the same meter as every other method.  Modeled time charges the
-    same §4.5 closed forms as :func:`repro.core.fdsvrg.run_fdsvrg` —
-    compute AND communication terms — so the two drivers' modeled-time
-    accounting is directly comparable (asserted in tests); measured host
-    wall-clock is reported per outer in the history, never mixed into the
-    model.  Returns ``(w, history, backend)`` with history entries of
-    ``(outer, grad_norm, comm_scalars, wall_time_s)``; ``grad_norm`` is
-    the optimality residual at the **post-epoch** iterate (via
-    :func:`make_optimality_eval`), matching every other driver.
+    for the mesh's q workers and runs ``outer_iters`` iterations of the
+    split :func:`make_fullgrad` / :func:`make_inner_epoch` pair through
+    :func:`repro.core.driver.run_outer_loop` — so snapshot rotation,
+    sample drawing (same rng stream as :func:`repro.core.fdsvrg.run_fdsvrg`
+    at the same seed), and same-iterate objective/optimality reporting
+    are the engine's, not a local copy.  Traffic and modeled time are
+    charged from the shared closed forms (:data:`repro.dist.COSTS`), so
+    the meter is bit-consistent with the simulation driver's for the same
+    shapes (asserted in tests).
+
+    Returns a :class:`~repro.core.driver.RunResult` — same schema as
+    every other driver, iterates in the data's dtype.
     """
     backend = backend or ShardMapBackend(
         mesh=mesh, feature_axes=feature_axes,
         tree_mode=cfg.tree_mode, cluster=cluster,
     )
-    step = make_outer_iteration(mesh, cfg, feature_axes, backend=backend)
-    gnorm_at = make_optimality_eval(mesh, cfg, feature_axes, backend=backend)
+    fullgrad = make_fullgrad(mesh, cfg, feature_axes, backend=backend)
+    inner_epoch = make_inner_epoch(mesh, cfg, feature_axes, backend=backend)
     q = backend.q
     block_data = BlockCSR.from_padded(data, balanced(cfg.dim, q))
     bidx, bval = block_data.stacked()
-    rng = np.random.default_rng(seed)
-    w = jnp.zeros((cfg.dim,), jnp.float32)
+    loss = losses_lib.LOSSES[cfg.loss_name]
+    reg = losses_lib.Regularizer(cfg.reg_name, cfg.lam, cfg.lam2)
     n, nnz, u = cfg.num_instances, cfg.nnz_max, cfg.batch_size
-    history = []
-    # Each record reports the residual at its POST-epoch iterate
-    # (consistent z/w pair, same convention as run_fdsvrg and the
-    # baselines).  The step fn already computes the snapshot residual in
-    # its full-gradient phase, and outer t+1's snapshot IS outer t's
-    # post-epoch iterate — so rotate it into the previous record and pay
-    # the standalone eval only once, for the final record.
-    pending = None  # (outer, scalars_after_outer, wall_s) awaiting its gnorm
-    for t in range(outer_iters):
-        samples = rng.integers(
-            0, cfg.num_instances, size=(cfg.inner_steps, u)
-        ).astype(np.int32)
-        t0 = time.perf_counter()
-        w, gnorm_snapshot = step(w, bidx, bval, data.labels, jnp.asarray(samples))
-        wall = time.perf_counter() - t0
-        if pending is not None:
-            history.append((pending[0], float(gnorm_snapshot),
-                            pending[1], pending[2]))
-        # Same closed forms as run_fdsvrg: full-gradient phase ...
+
+    def snapshot(w):
+        return fullgrad(w, bidx, bval, data.labels)
+
+    def epoch(t, rng, w, z_data, s0):
         backend.meter_tree(payload=n)
-        backend.charge(
-            flops=2.0 * n * nnz / q * 2,  # margins + scatter, per worker
-            scalars=2 * q * n,
-            rounds=backend.tree_rounds,
-        )
-        # ... and the M inner steps (dense O(d/q) + sparse O(u*nnz) work).
+        backend.charge_cost(COSTS.fd_fullgrad(n=n, nnz=nnz, q=q))
+        samples = draw_samples(rng, n, cfg.inner_steps, u)
+        w = inner_epoch(w, z_data, s0, bidx, bval, data.labels,
+                        jnp.asarray(samples))
         backend.meter_tree(payload=u, steps=cfg.inner_steps)
-        backend.charge_seconds(
-            cfg.inner_steps
-            * backend.cluster.time(
-                critical_flops=2.0 * (cfg.dim / q + u * nnz),
-                critical_scalars=2 * q * u,
-                rounds=backend.tree_rounds,
-            )
+        backend.charge_cost(
+            COSTS.fd_inner_step(nnz=nnz, q=q, u=u), steps=cfg.inner_steps
         )
-        pending = (t, backend.meter.total_scalars, wall)
-    if pending is not None:
-        history.append((pending[0], float(gnorm_at(w, bidx, bval, data.labels)),
-                        pending[1], pending[2]))
-    return w, history, backend
+        return w
+
+    return run_outer_loop(
+        outer_iters=outer_iters,
+        seed=seed,
+        init_w=jnp.zeros((cfg.dim,), data.values.dtype),
+        snapshot=snapshot,
+        epoch=epoch,
+        evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
+        backend=backend,
+    )
 
 
 def input_shardings(mesh: Mesh, feature_axes: Sequence[str] = ("data", "model")):

@@ -87,6 +87,21 @@ class BlockCSR:
         use.  The single-block partition reuses the PaddedCSR rows as-is
         (local ids == global ids when lo = 0), so the q = 1 path is
         bit-for-bit the global layout.
+
+        **Explicit-zero invariant.**  Entries with ``value == 0.0`` are
+        dropped during re-indexing (the ``val != 0.0`` filter below), so
+        an explicitly stored zero becomes indistinguishable from padding —
+        including the collision case where a genuine ``(global id lo,
+        0.0)`` entry would land exactly on the padding pattern ``(local
+        id 0, value 0.0)``.  This is safe for every operation this layout
+        supports — dots (:func:`local_margins`) and scatter-adds
+        (:func:`local_scatter`) — because a zero *value* contributes
+        nothing regardless of its index; the property tests in
+        ``tests/test_block_csr.py`` pin margins/scatter equality against
+        the masked oracle on data containing explicit zeros.  Any future
+        operation that keys off *structural* nonzeros (e.g. counting
+        stored entries per feature) must not assume explicit zeros
+        survive this constructor.
         """
         if partition.dim != data.dim:
             raise ValueError(

@@ -11,6 +11,9 @@ models crossing) a worker boundary:
   butterfly mappings.
 * :mod:`repro.dist.collectives`  — the ``Collectives`` protocol and the
   ``LocalBackend`` / ``SimBackend`` single-process backends.
+* :mod:`repro.dist.costs`        — ``CostModel``, the single home of the
+  §4.5 per-outer closed forms (drivers charge them, benchmark schedules
+  aggregate them, the drift-guard test pins them together).
 * :mod:`repro.dist.shardmap`     — ``ShardMapBackend``, the deployable
   shard_map realization over a mesh axis.
 * :mod:`repro.dist.metering`     — ``CommReport``, the per-method
@@ -30,6 +33,7 @@ from repro.dist.collectives import (
     SimBackend,
 )
 from repro.dist.compat import make_mesh, shard_map
+from repro.dist.costs import COSTS, CostModel, PhaseCost
 from repro.dist.meter import (
     ClusterModel,
     CommEvent,
@@ -49,11 +53,14 @@ from repro.dist.tree import (
 )
 
 __all__ = [
+    "COSTS",
     "ClusterModel",
     "Collectives",
     "CommEvent",
     "CommMeter",
     "CommReport",
+    "CostModel",
+    "PhaseCost",
     "LocalBackend",
     "ShardMapBackend",
     "SimBackend",

@@ -37,6 +37,7 @@ from typing import Protocol, Sequence, runtime_checkable
 
 import jax.numpy as jnp
 
+from repro.dist.costs import PhaseCost
 from repro.dist.meter import ClusterModel, CommMeter, tree_rounds
 from repro.dist.metering import CommReport
 from repro.dist.tree import simulate_tree_sum, tree_order_sum
@@ -74,6 +75,11 @@ class Collectives(Protocol):
     def charge_seconds(self, seconds: float) -> None:
         """Accumulate pre-computed modeled wall-clock (method-specific
         formulas, e.g. async server-bound throughput)."""
+        ...
+
+    def charge_cost(self, cost: "PhaseCost", steps: int = 1) -> None:
+        """Accumulate modeled wall-clock for ``steps`` repetitions of one
+        :class:`~repro.dist.costs.PhaseCost` closed form."""
         ...
 
     @property
@@ -115,6 +121,13 @@ class MeteredBackend:
 
     def charge_seconds(self, seconds: float) -> None:
         self._modeled_time += float(seconds)
+
+    def charge_cost(self, cost: PhaseCost, steps: int = 1) -> None:
+        self._modeled_time += steps * self.cluster.time(
+            critical_flops=cost.flops,
+            critical_scalars=cost.scalars,
+            rounds=cost.rounds,
+        )
 
     @property
     def modeled_time_s(self) -> float:

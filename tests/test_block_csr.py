@@ -231,6 +231,109 @@ if HAS_HYPOTHESIS:
 
 
 # ---------------------------------------------------------------------------
+# explicit-zero entries (the from_padded `val != 0.0` filter invariant)
+# ---------------------------------------------------------------------------
+
+
+def _data_with_explicit_zeros(dim=120, n=9, nnz=6, seed=5, block_lo=None):
+    """Padded rows where some stored entries have value exactly 0.0 —
+    including, when ``block_lo`` is given, an explicit zero AT a block's
+    lower bound, whose re-indexed form (local id 0, value 0.0) collides
+    exactly with the padding pattern."""
+    rng = np.random.default_rng(seed)
+    base = make_sparse_classification(
+        dim=dim, num_instances=n, nnz_per_instance=nnz, seed=seed
+    )
+    val = np.asarray(base.values).copy()
+    idx = np.asarray(base.indices).copy()
+    # zero out one genuine entry per even row (index kept: explicit zero)
+    for i in range(0, n, 2):
+        val[i, rng.integers(0, nnz)] = 0.0
+    if block_lo is not None:
+        # a stored (id == block lower bound, value 0.0) entry
+        idx[1, 0] = block_lo
+        val[1, 0] = 0.0
+    return PaddedCSR(
+        indices=jnp.asarray(idx), values=jnp.asarray(val),
+        labels=base.labels, dim=dim,
+    )
+
+
+@pytest.mark.parametrize("q", [2, 3, 4])
+def test_explicit_zeros_margins_and_scatter_match_masked(q):
+    """Explicit zeros are dropped by from_padded — and that is safe:
+    margins and scatter match the masked oracle (which keeps them) bit
+    for contribution, because a zero value contributes nothing."""
+    part = balanced(120, q)
+    lo1 = part.block(1)[0]  # put a colliding (id lo, 0.0) in block 1
+    data = _data_with_explicit_zeros(block_lo=lo1)
+    b = BlockCSR.from_padded(data, part)
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.normal(size=data.dim).astype(np.float32))
+    coeffs = jnp.asarray(
+        rng.normal(size=data.num_instances).astype(np.float32)
+    )
+    for l in range(q):
+        lo, hi = part.block(l)
+        got = local_margins(*b.block(l), w[lo:hi])
+        want = masked_margins(data.indices, data.values, w[lo:hi], lo)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+        )
+        got_s = local_scatter(*b.block(l), coeffs, hi - lo)
+        want_s = masked_scatter(data.indices, data.values, coeffs, lo, hi - lo)
+        np.testing.assert_allclose(
+            np.asarray(got_s), np.asarray(want_s), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_explicit_zeros_dropped_from_budgets_and_counts():
+    """from_padded counts only value != 0 entries: nnz_total excludes the
+    explicit zeros, and per-block budgets never grow because of them."""
+    data = _data_with_explicit_zeros()
+    b = BlockCSR.from_padded(data, balanced(data.dim, 3))
+    assert b.nnz_total() == int(jnp.sum(data.values != 0.0))
+    dense_rows = (np.asarray(data.values) != 0.0).sum(axis=1)
+    assert max(b.nnz_budgets) <= int(dense_rows.max())
+
+
+if HAS_HYPOTHESIS:
+
+    @given(
+        st.integers(min_value=2, max_value=6),
+        st.integers(min_value=0, max_value=10_000),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_property_explicit_zeros_preserve_margins(q, seed):
+        rng = np.random.default_rng(seed)
+        data = _data_with_explicit_zeros(dim=97, n=7, nnz=5, seed=seed % 13)
+        part = balanced(data.dim, q)
+        b = BlockCSR.from_padded(data, part)
+        w = jnp.asarray(rng.normal(size=data.dim).astype(np.float32))
+        ids = jnp.asarray(
+            rng.integers(0, data.num_instances, size=4).astype(np.int32)
+        )
+        coeffs = jnp.asarray(rng.normal(size=4).astype(np.float32))
+        for l in range(part.num_blocks):
+            lo, hi = part.block(l)
+            idx_l, val_l = b.block(l)
+            got = local_margins(idx_l[ids], val_l[ids], w[lo:hi])
+            want = masked_margins(
+                data.indices[ids], data.values[ids], w[lo:hi], lo
+            )
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+            )
+            got_s = local_scatter(idx_l[ids], val_l[ids], coeffs, hi - lo)
+            want_s = masked_scatter(
+                data.indices[ids], data.values[ids], coeffs, lo, hi - lo
+            )
+            np.testing.assert_allclose(
+                np.asarray(got_s), np.asarray(want_s), rtol=1e-5, atol=1e-6
+            )
+
+
+# ---------------------------------------------------------------------------
 # vectorized to_dense (satellite regression)
 # ---------------------------------------------------------------------------
 

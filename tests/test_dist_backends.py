@@ -148,13 +148,14 @@ def test_fdsvrg_run_identical_across_backends(data, kind):
     byte counts for a small FD-SVRG run."""
     cfg = SVRGConfig(eta=0.2, inner_steps=10, outer_iters=2, seed=13)
     part = balanced(data.dim, Q)
-    ref_w, ref_meter = fdsvrg_worker_simulation(
+    ref = fdsvrg_worker_simulation(
         data, part, LOSS, REG, cfg, backend=SimBackend(Q)
     )
-    w, meter = fdsvrg_worker_simulation(
+    res = fdsvrg_worker_simulation(
         data, part, LOSS, REG, cfg, backend=make_backend(kind)
     )
-    np.testing.assert_array_equal(np.asarray(w), np.asarray(ref_w))
+    w, meter, ref_meter = res.w, res.meter, ref.meter
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(ref.w))
     assert meter.total_scalars == ref_meter.total_scalars
     assert meter.total_rounds == ref_meter.total_rounds
     assert dict(meter.by_kind) == dict(ref_meter.by_kind)
@@ -173,10 +174,10 @@ def test_run_fdsvrg_accepts_backend(data):
     assert res.history[-1].comm_scalars == backend.meter.total_scalars
     assert res.history[-1].modeled_time_s == pytest.approx(backend.modeled_time_s)
     # jitted driver and worker simulation agree on the accounting
-    _, sim_meter = fdsvrg_worker_simulation(
+    sim = fdsvrg_worker_simulation(
         data, balanced(data.dim, Q), LOSS, REG, cfg, backend=SimBackend(Q)
     )
-    assert backend.meter.total_scalars == sim_meter.total_scalars
+    assert backend.meter.total_scalars == sim.meter.total_scalars
 
 
 def test_run_fdsvrg_rejects_mismatched_backend_q(data):

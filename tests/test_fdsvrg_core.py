@@ -72,11 +72,15 @@ def test_worker_simulation_equals_serial(tiny_data, q):
     cfg = SVRGConfig(eta=0.2, inner_steps=12, outer_iters=2, seed=7)
     serial = run_serial_svrg(tiny_data, LOSS, REG, cfg)
     part = balanced(tiny_data.dim, q)
-    w_sim, meter = fdsvrg_worker_simulation(tiny_data, part, LOSS, REG, cfg)
+    sim = fdsvrg_worker_simulation(tiny_data, part, LOSS, REG, cfg)
     np.testing.assert_allclose(
-        np.asarray(w_sim), np.asarray(serial.w), rtol=2e-4, atol=2e-6
+        np.asarray(sim.w), np.asarray(serial.w), rtol=2e-4, atol=2e-6
     )
-    assert meter.total_scalars > 0
+    assert sim.meter.total_scalars > 0
+    # the sim is a full harness citizen now: same-iterate reporting too
+    np.testing.assert_allclose(
+        sim.history[-1].objective, serial.history[-1].objective, rtol=1e-5
+    )
 
 
 def test_fdsvrg_nnz_partition_equals_serial(tiny_data):
@@ -140,11 +144,11 @@ def test_fdsvrg_use_kernels_bit_identical(tiny_data, q):
 def test_worker_simulation_use_kernels_bit_identical(tiny_data, q):
     cfg = SVRGConfig(eta=0.2, inner_steps=8, outer_iters=2, seed=7)
     part = balanced(tiny_data.dim, q)
-    wa, _ = fdsvrg_worker_simulation(tiny_data, part, LOSS, REG, cfg,
-                                     use_kernels=False)
-    wb, _ = fdsvrg_worker_simulation(tiny_data, part, LOSS, REG, cfg,
-                                     use_kernels=True)
-    np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
+    a = fdsvrg_worker_simulation(tiny_data, part, LOSS, REG, cfg,
+                                 use_kernels=False)
+    b = fdsvrg_worker_simulation(tiny_data, part, LOSS, REG, cfg,
+                                 use_kernels=True)
+    np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
 
 
 def test_use_kernels_option_II_and_minibatch(tiny_data):

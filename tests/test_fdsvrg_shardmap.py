@@ -126,10 +126,12 @@ def test_shardmap_use_kernels_bit_identical_single_device():
 
 
 def test_sharded_driver_metering_matches_simulation_driver():
-    """Satellite: run_fdsvrg_sharded must charge the same §4.5 closed
-    forms — compute terms included — as run_fdsvrg, so the two drivers'
-    modeled times agree for identical shapes.  (The sharded driver used to
-    charge flops=0 for the full-gradient phase.)"""
+    """run_fdsvrg_sharded must charge the same §4.5 closed forms —
+    compute terms included — as run_fdsvrg (both consume repro.dist.COSTS
+    now), so the two drivers' meters and modeled times are bit-consistent
+    for identical shapes, record by record."""
+    from repro.dist import ShardMapBackend
+
     data = make_sparse_classification(
         dim=512, num_instances=64, nnz_per_instance=8, seed=0
     )
@@ -139,26 +141,66 @@ def test_sharded_driver_metering_matches_simulation_driver():
         dim=data.dim, num_instances=data.num_instances, nnz_max=data.nnz_max,
         eta=0.1, inner_steps=inner, batch_size=u, lam=1e-3,
     )
-    w, history, backend = run_fdsvrg_sharded(
-        data, mesh, cfg, feature_axes=("model",), outer_iters=outers, seed=0
+    backend = ShardMapBackend(mesh=mesh, feature_axes=("model",))
+    res = run_fdsvrg_sharded(
+        data, mesh, cfg, feature_axes=("model",), outer_iters=outers, seed=0,
+        backend=backend,
     )
+    assert res.meter is backend.meter
     assert backend.modeled_time_s > 0.0
 
     sim_backend = SimBackend(backend.q)
     sim_cfg = SVRGConfig(eta=0.1, inner_steps=inner, outer_iters=outers,
                          batch_size=u, seed=0)
-    run_fdsvrg(data, balanced(data.dim, backend.q), losses.logistic,
-               losses.l2(1e-3), sim_cfg, backend=sim_backend)
+    sim = run_fdsvrg(data, balanced(data.dim, backend.q), losses.logistic,
+                     losses.l2(1e-3), sim_cfg, backend=sim_backend)
     assert backend.meter.total_scalars == sim_backend.meter.total_scalars
     np.testing.assert_allclose(
         backend.modeled_time_s, sim_backend.modeled_time_s, rtol=1e-12
     )
+    # the two drivers run the same harness: record-by-record schema parity
+    for h_sh, h_sim in zip(res.history, sim.history):
+        assert h_sh.outer == h_sim.outer
+        assert h_sh.comm_scalars == h_sim.comm_scalars
+        assert h_sh.comm_rounds == h_sim.comm_rounds
+        np.testing.assert_allclose(h_sh.modeled_time_s, h_sim.modeled_time_s,
+                                   rtol=1e-12)
+
+
+def test_sharded_driver_matches_sim_driver_iterates_and_objective():
+    """Same seed => same sample stream through the shared harness: the
+    q=1 shard_map driver and run_fdsvrg produce matching iterates and
+    per-outer objectives (the sharded path finally reports a real
+    RunResult with objectives, like everyone else)."""
+    data = make_sparse_classification(
+        dim=384, num_instances=48, nnz_per_instance=8, seed=1
+    )
+    inner, u, outers = 10, 2, 2
+    mesh = jax.make_mesh((1,), ("model",))
+    cfg = FDSVRGShardedConfig(
+        dim=data.dim, num_instances=data.num_instances, nnz_max=data.nnz_max,
+        eta=0.2, inner_steps=inner, batch_size=u, lam=1e-3,
+    )
+    res = run_fdsvrg_sharded(
+        data, mesh, cfg, feature_axes=("model",), outer_iters=outers, seed=7
+    )
+    sim_cfg = SVRGConfig(eta=0.2, inner_steps=inner, outer_iters=outers,
+                         batch_size=u, seed=7)
+    sim = run_fdsvrg(data, balanced(data.dim, 1), losses.logistic,
+                     losses.l2(1e-3), sim_cfg)
+    np.testing.assert_allclose(
+        np.asarray(res.w), np.asarray(sim.w), rtol=2e-4, atol=2e-6
+    )
+    for h_sh, h_sim in zip(res.history, sim.history):
+        np.testing.assert_allclose(h_sh.objective, h_sim.objective, rtol=1e-5)
+        np.testing.assert_allclose(h_sh.grad_norm, h_sim.grad_norm, rtol=1e-3,
+                                   atol=1e-6)
 
 
 def test_sharded_driver_gnorm_is_post_epoch_residual():
-    """history[-1]'s grad_norm must be the optimality residual at the
-    RETURNED iterate (the step fn's own gnorm output is the snapshot
-    residual — one epoch stale for reporting purposes)."""
+    """Every record's grad_norm must be the optimality residual at that
+    outer's post-epoch iterate (the fused step fn's own gnorm output is
+    the snapshot residual — one epoch stale for reporting purposes)."""
     from repro.core.fdsvrg import full_gradient, optimality_norm
 
     data = make_sparse_classification(
@@ -171,14 +213,46 @@ def test_sharded_driver_gnorm_is_post_epoch_residual():
             eta=0.2, inner_steps=8, batch_size=2,
             reg_name=reg_name, lam=lam, lam2=lam2,
         )
-        w, history, backend = run_fdsvrg_sharded(
+        res = run_fdsvrg_sharded(
             data, mesh, cfg, feature_axes=("model",), outer_iters=2, seed=0
         )
-        gd, _ = full_gradient(data, w, losses.logistic)
+        gd, _ = full_gradient(data, res.w, losses.logistic)
         want = optimality_norm(
-            gd, w, losses.Regularizer(reg_name, lam, lam2), cfg.eta
+            gd, res.w, losses.Regularizer(reg_name, lam, lam2), cfg.eta
         )
-        np.testing.assert_allclose(history[-1][1], want, rtol=1e-4)
+        np.testing.assert_allclose(res.history[-1].grad_norm, want, rtol=1e-4)
+
+
+def test_sharded_driver_preserves_float64():
+    """Satellite regression: the sharded driver used to hardcode
+    jnp.float32 for the initial iterate, silently demoting float64 runs —
+    it must initialize from the data's dtype (same bug class PR 3 fixed
+    in _run_async)."""
+    from repro.data.sparse import PaddedCSR
+
+    data32 = make_sparse_classification(
+        dim=128, num_instances=16, nnz_per_instance=4, seed=0
+    )
+    enable_x64 = getattr(jax, "enable_x64", None) or jax.experimental.enable_x64
+    with enable_x64(True):
+        data = PaddedCSR(
+            indices=jnp.asarray(np.asarray(data32.indices)),
+            values=jnp.asarray(np.asarray(data32.values), dtype=jnp.float64),
+            labels=jnp.asarray(np.asarray(data32.labels), dtype=jnp.float64),
+            dim=data32.dim,
+        )
+        mesh = jax.make_mesh((1,), ("model",))
+        cfg = FDSVRGShardedConfig(
+            dim=data.dim, num_instances=data.num_instances,
+            nnz_max=data.nnz_max, eta=0.2, inner_steps=4, batch_size=2,
+            lam=1e-3,
+        )
+        res = run_fdsvrg_sharded(
+            data, mesh, cfg, feature_axes=("model",), outer_iters=1, seed=0
+        )
+        assert res.w.dtype == jnp.float64
+        assert np.all(np.isfinite(np.asarray(res.w)))
+        assert np.isfinite(res.history[-1].objective)
 
 
 def test_input_shardings_match_step_arity():

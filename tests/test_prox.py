@@ -173,13 +173,13 @@ def test_fd_prox_svrg_equals_serial(tiny_data, reg, q):
 def test_prox_worker_simulation_equals_serial(tiny_data, reg, q):
     cfg = SVRGConfig(eta=0.2, inner_steps=12, outer_iters=2, seed=7)
     serial = run_serial_svrg(tiny_data, LOSS, reg, cfg)
-    w_sim, meter = fdsvrg_worker_simulation(
+    sim = fdsvrg_worker_simulation(
         tiny_data, balanced(tiny_data.dim, q), LOSS, reg, cfg
     )
     np.testing.assert_allclose(
-        np.asarray(w_sim), np.asarray(serial.w), rtol=2e-4, atol=2e-6
+        np.asarray(sim.w), np.asarray(serial.w), rtol=2e-4, atol=2e-6
     )
-    assert meter.total_scalars > 0
+    assert sim.meter.total_scalars > 0
 
 
 @REGS
@@ -191,11 +191,11 @@ def test_prox_use_kernels_bit_identical(tiny_data, reg, q):
     b = run_fdsvrg(tiny_data, part, LOSS, reg, cfg, use_kernels=True)
     np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
     assert a.meter.total_scalars == b.meter.total_scalars
-    wa, _ = fdsvrg_worker_simulation(tiny_data, part, LOSS, reg, cfg,
-                                     use_kernels=False)
-    wb, _ = fdsvrg_worker_simulation(tiny_data, part, LOSS, reg, cfg,
-                                     use_kernels=True)
-    np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
+    sa = fdsvrg_worker_simulation(tiny_data, part, LOSS, reg, cfg,
+                                  use_kernels=False)
+    sb = fdsvrg_worker_simulation(tiny_data, part, LOSS, reg, cfg,
+                                  use_kernels=True)
+    np.testing.assert_array_equal(np.asarray(sa.w), np.asarray(sb.w))
 
 
 @REGS
