@@ -8,49 +8,25 @@ computed ANALYTICALLY from the paper's full-size Table-1 dimensions via
 paper ran on, not the shrunken simulation.  The compute rate models lazy
 sparse updates (all methods get the standard O(nnz)-per-step trick) at the
 effective sparse throughput of an E5-2620-class core.
+
+Method dispatch, per-method paper defaults, and the BlockCSR cache used
+to live here; they are now owned by :mod:`repro.api` (the solver
+registry and the shared bounded :data:`repro.api.BLOCK_CACHE`).  What
+remains here is benchmark *reporting*: the analytic full-size schedules,
+CSV/JSON writers, and a deprecated :func:`run_method` shim kept so the
+sweep modules (and any external notebook) don't all churn at once.
 """
 
 from __future__ import annotations
 
 import csv
 import os
-import time
-from collections import OrderedDict
 
-import numpy as np
-
+from repro.api import ExperimentSpec, solve
 from repro.core import losses
-from repro.core.fdsvrg import RunResult, SVRGConfig, run_fdsvrg, run_serial_svrg
-from repro.core.partition import balanced
-from repro.core import baselines
+from repro.core.driver import RunResult
 from repro.data import datasets
-from repro.data.block_csr import BlockCSR
 from repro.dist import COSTS, ClusterModel, CommReport
-
-# Re-indexing a data set into BlockCSR is host-side numpy work; sweeps call
-# run_method repeatedly with the same (data, q), so amortize it — but with
-# per-sweep scope: a new data object evicts every entry built for other
-# data sets (the unbounded id()-keyed dict used to pin whole data sets
-# alive across sweeps), and an LRU bound caps the per-data entries too.
-_BLOCK_CACHE: "OrderedDict[tuple[int, int], tuple[object, BlockCSR]]" = OrderedDict()
-_BLOCK_CACHE_MAX = 4  # distinct q values cached for the current data set
-
-
-def _block_data(data, q: int) -> BlockCSR:
-    key = (id(data), q)
-    hit = _BLOCK_CACHE.get(key)
-    if hit is not None and hit[0] is data:
-        _BLOCK_CACHE.move_to_end(key)
-        return hit[1]
-    # New data object: this sweep moved on — drop other data sets' entries
-    # (and any stale entry whose id() was recycled).
-    for k in [k for k, v in _BLOCK_CACHE.items() if v[0] is not data]:
-        del _BLOCK_CACHE[k]
-    block = BlockCSR.from_padded(data, balanced(data.dim, q))
-    _BLOCK_CACHE[key] = (data, block)
-    while len(_BLOCK_CACHE) > _BLOCK_CACHE_MAX:
-        _BLOCK_CACHE.popitem(last=False)
-    return block
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
 
@@ -58,19 +34,10 @@ LOSS = losses.logistic
 # sparse-gradient effective throughput (random-access bound), 10GbE, ~50us RTT
 CLUSTER = ClusterModel(flops_per_s=2.0e8)
 
-# FD-SVRG inner-loop mini-batch (paper §4.4.1; latency amortization)
+# FD-SVRG inner-loop mini-batch (paper §4.4.1; latency amortization) —
+# the *analytic* full-size operating point of the Figure-6/7 schedules
+# (the measured trajectories run the registry's scaled paper defaults).
 FD_BATCH = 1024
-
-# per-method step sizes tuned on the scaled sets (fixed, like the paper)
-ETA = {
-    "fdsvrg": 2.0, "serial": 2.0, "dsvrg": 1.0,
-    "synsvrg": 2.0, "asysvrg": 0.5, "pslite_sgd": 0.3,
-}
-# scaled-trajectory minibatch for FD-SVRG (keeps big-set scans tractable)
-U_TRAJ = 8
-# cap on inner steps per outer for the scaled trajectories of the
-# largest sets (url/kdd) — subsampled epochs, noted in EXPERIMENTS.md
-MAX_INNER = 12_000
 
 
 def lam_equiv(name: str, factor: float = 1.0) -> float:
@@ -141,7 +108,7 @@ def run_method(
     method: str,
     data,
     q: int,
-    lam: float,
+    lam: float | None = None,
     *,
     reg: losses.Regularizer | None = None,
     eta: float | None = None,
@@ -150,60 +117,53 @@ def run_method(
     seed: int = 0,
     use_kernels: bool = False,
 ) -> RunResult:
-    """One named method on one data set with the paper's M conventions.
+    """DEPRECATED shim over :func:`repro.api.solve` — behavior-identical
+    to the pre-registry dispatcher at the benchmark defaults (asserted by
+    the parity tests in tests/test_api.py).  New code should build an
+    :class:`repro.api.ExperimentSpec` and call ``solve`` directly.
 
-    ``reg`` overrides the default L2(lam) regularizer — pass
-    ``losses.l1(...)`` / ``losses.elastic_net(...)`` for the proximal
-    variants (every method runs the same prox update family, so Fig-6/7
-    comparisons stay like-for-like).  ``lam`` stays the headline strength
-    either way, so a mismatched override fails loudly instead of silently
-    running at a different lambda than the caller reports.
+    The old dual-argument footgun is gone: the spec takes ONE
+    regularizer.  ``reg=None`` means L2 at strength ``lam``; when ``reg``
+    is given it IS the regularizer and the headline lambda is derived
+    from it (``reg.lam``) — there is no second strength to mismatch and
+    no mismatch error to hit.
 
-    ``use_kernels=True`` routes the ``serial``/``fdsvrg`` hot paths
-    through the fused Pallas kernels (interpret mode off-TPU) —
-    bit-identical iterates and meters to the jnp path, so BENCH_*
-    trajectories can exercise the kernels directly.  Note the fused
-    kernels bake lambda in at compile time, so kernel-path sweeps pay one
-    compile per lambda point (the jnp path traces lambda and compiles
-    once per sweep)."""
+    Per-method defaults (step size, trajectory mini-batch, the ``m = N/u``
+    inner rule and its cap) resolve through the registry's ``"paper"``
+    sentinels.  ``batch_size`` is honored for the FD family; for the
+    legacy baseline methods it is ignored exactly as the pre-registry
+    dispatcher ignored it (bit parity) — pass a spec to ``solve`` if you
+    want a baseline at a non-default batch.
+    """
+    import warnings
+
+    warnings.warn(
+        "benchmarks.common.run_method is a deprecated shim; build an "
+        "ExperimentSpec and call repro.api.solve instead",
+        DeprecationWarning, stacklevel=2,
+    )
     if reg is None:
+        if lam is None:
+            raise TypeError("run_method needs lam (or an explicit reg)")
         reg = losses.l2(lam)
-    elif reg.lam != lam:
-        raise ValueError(
-            f"reg.lam={reg.lam!r} disagrees with lam={lam!r}; pass the same "
-            "strength in both (lam is what sweeps record/report)"
-        )
-    n = data.num_instances
-    eta = ETA[method] if eta is None else eta
-    if method == "fdsvrg":
-        u = U_TRAJ if batch_size is None else batch_size
-        m = min(max(1, n // u), MAX_INNER)
-        cfg = SVRGConfig(eta=eta, inner_steps=m,
-                         outer_iters=outer_iters, batch_size=u, seed=seed)
-        return run_fdsvrg(data, balanced(data.dim, q), LOSS, reg, cfg, CLUSTER,
-                          use_kernels=use_kernels,
-                          block_data=_block_data(data, q))
-    if method == "serial":
-        cfg = SVRGConfig(eta=eta, inner_steps=min(n, MAX_INNER),
-                         outer_iters=outer_iters, seed=seed)
-        return run_serial_svrg(data, LOSS, reg, cfg, use_kernels=use_kernels)
-    if method == "dsvrg":
-        cfg = SVRGConfig(eta=eta, inner_steps=min(max(1, n // q), MAX_INNER),
-                         outer_iters=outer_iters, seed=seed)
-        return baselines.run_dsvrg(data, q, LOSS, reg, cfg, CLUSTER)
-    if method == "synsvrg":
-        cfg = SVRGConfig(eta=eta, inner_steps=min(max(1, n // q), MAX_INNER),
-                         outer_iters=outer_iters, seed=seed)
-        return baselines.run_syn_svrg(data, q, LOSS, reg, cfg, CLUSTER)
-    if method == "asysvrg":
-        cfg = SVRGConfig(eta=eta, inner_steps=min(n, MAX_INNER),
-                         outer_iters=outer_iters, seed=seed)
-        return baselines.run_asy_svrg(data, q, LOSS, reg, cfg, CLUSTER)
-    if method == "pslite_sgd":
-        cfg = SVRGConfig(eta=eta, inner_steps=min(n, MAX_INNER),
-                         outer_iters=outer_iters, seed=seed)
-        return baselines.run_pslite_sgd(data, q, LOSS, reg, cfg, CLUSTER)
-    raise ValueError(method)
+    fd_family = ("fdsvrg", "fdsvrg_sim", "fdsvrg_sharded")
+    spec = ExperimentSpec(
+        method=method,
+        data=data,
+        q=q,
+        reg=reg,
+        eta="paper" if eta is None else eta,
+        batch_size=(
+            batch_size
+            if batch_size is not None and method in fd_family
+            else "paper"
+        ),
+        outer_iters=outer_iters,
+        seed=seed,
+        use_kernels=use_kernels,
+        cluster=CLUSTER,
+    )
+    return solve(spec)
 
 
 def comm_report(method: str, result: RunResult, q: int) -> CommReport:

@@ -24,7 +24,6 @@ import time
 import numpy as np
 
 from benchmarks.common import (
-    ETA,
     analytic_schedule,
     best_objective,
     lam_equiv,
@@ -32,6 +31,7 @@ from benchmarks.common import (
     write_bench_json,
     write_csv,
 )
+from repro.api import method_info
 from repro.core import losses
 from repro.data import datasets
 
@@ -119,7 +119,7 @@ def run_prox(quick: bool = False):
         "dataset": name,
         "dim": data.dim,
         "workers": q,
-        "eta": ETA["fdsvrg"],
+        "eta": method_info("fdsvrg").paper_eta,
         "outer_iters": outer_iters,
         "comm_parity_with_l2": parity,
         "sweep": report,

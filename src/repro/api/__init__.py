@@ -1,0 +1,56 @@
+"""repro.api — the public front door.
+
+One declarative spec, one solver registry, one estimator:
+
+* :class:`~repro.api.spec.ExperimentSpec` — a frozen description of one
+  run (data, loss, ONE regularizer, method, schedule with ``"paper"``
+  auto-defaults, backend knobs).
+* :func:`~repro.api.registry.solve` — runs a spec through its registered
+  driver and returns the shared :class:`~repro.core.driver.RunResult`;
+  :func:`~repro.api.registry.register_method` +
+  :class:`~repro.api.registry.MethodInfo` are the extension point.
+* :class:`~repro.api.estimator.FDSVRGClassifier` — scikit-learn-style
+  ``fit`` / ``partial_fit`` (warm start) / ``predict`` / ``score``.
+* :data:`~repro.api.cache.BLOCK_CACHE` — the shared bounded BlockCSR
+  cache ``solve`` builds partitions through.
+* ``python -m repro.api.cli`` — any registered method on any
+  ``LinearConfig`` preset.
+
+Benchmarks, examples, launch, and serving all drive the same surface;
+``benchmarks.common.run_method`` survives only as a deprecated shim over
+:func:`solve`.
+"""
+
+from repro.api.cache import BLOCK_CACHE, BlockCache, block_data
+from repro.api.estimator import FDSVRGClassifier, as_padded_csr
+from repro.api.registry import (
+    METHODS,
+    PAPER_FD_BATCH,
+    PAPER_MAX_INNER,
+    MethodInfo,
+    ResolvedRun,
+    capability_matrix,
+    method_info,
+    register_method,
+    solve,
+)
+from repro.api.spec import PAPER, ExperimentSpec
+
+__all__ = [
+    "BLOCK_CACHE",
+    "BlockCache",
+    "ExperimentSpec",
+    "FDSVRGClassifier",
+    "METHODS",
+    "MethodInfo",
+    "PAPER",
+    "PAPER_FD_BATCH",
+    "PAPER_MAX_INNER",
+    "ResolvedRun",
+    "as_padded_csr",
+    "block_data",
+    "capability_matrix",
+    "method_info",
+    "register_method",
+    "solve",
+]

@@ -1,0 +1,74 @@
+"""The shared, bounded BlockCSR cache service.
+
+Re-indexing a data set into the block-local
+:class:`~repro.data.block_csr.BlockCSR` layout is host-side numpy work
+that every FD caller repeats for the same ``(data, q)`` pair: sweeps call
+:func:`repro.api.solve` many times per data set, the estimator refits,
+the CLI re-runs.  This cache amortizes it once for all of them (it used
+to be a private dict inside ``benchmarks/common.py``, invisible to every
+non-benchmark caller).
+
+Scoping rules (unchanged from the benchmarks-era cache, now tested where
+the cache lives):
+
+* **per-sweep scope** — a new data object evicts every entry built for
+  other data sets, so a sweep over data sets never pins the previous
+  set's blocks alive (the original unbounded ``id()``-keyed dict did);
+  the identity check also guards against ``id()`` recycling.
+* **LRU bound** — at most :attr:`BlockCache.max_entries` distinct ``q``
+  values are kept for the current data set.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from repro.core.partition import balanced
+from repro.data.block_csr import BlockCSR
+from repro.data.sparse import PaddedCSR
+
+
+class BlockCache:
+    """A bounded ``(data, q) -> BlockCSR`` cache with per-sweep scope."""
+
+    def __init__(self, max_entries: int = 4) -> None:
+        self.max_entries = int(max_entries)
+        self._entries: OrderedDict[
+            tuple[int, int], tuple[object, BlockCSR]
+        ] = OrderedDict()
+
+    def get(self, data: PaddedCSR, q: int) -> BlockCSR:
+        """The BlockCSR of ``data`` at ``q`` blocks, built at most once."""
+        key = (id(data), q)
+        hit = self._entries.get(key)
+        if hit is not None and hit[0] is data:
+            self._entries.move_to_end(key)
+            return hit[1]
+        # New data object: the sweep moved on — drop other data sets'
+        # entries (and any stale entry whose id() was recycled).
+        for k in [k for k, v in self._entries.items() if v[0] is not data]:
+            del self._entries[k]
+        block = BlockCSR.from_padded(data, balanced(data.dim, q))
+        self._entries[key] = (data, block)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+        return block
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def values(self):
+        """(data, BlockCSR) pairs, LRU order (oldest first) — tests."""
+        return self._entries.values()
+
+
+#: The process-wide cache :func:`repro.api.solve` uses.
+BLOCK_CACHE = BlockCache()
+
+
+def block_data(data: PaddedCSR, q: int) -> BlockCSR:
+    """Module-level convenience over :data:`BLOCK_CACHE`."""
+    return BLOCK_CACHE.get(data, q)

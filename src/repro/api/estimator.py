@@ -1,0 +1,286 @@
+"""`FDSVRGClassifier` — a scikit-learn-style fit/predict estimator over
+the solver registry.
+
+This is the first user-facing *serving* scenario for the repo's trained
+linear models: fit on a :class:`~repro.data.sparse.PaddedCSR` (or a
+dense ``(X, y)`` pair, converted internally), then
+``decision_function`` / ``predict`` / ``score`` like any sklearn linear
+classifier.  Any registered method is a constructor argument away —
+``FDSVRGClassifier(method="dsvrg")`` trains with the DSVRG driver
+through the same :func:`repro.api.solve` front door the benchmarks use.
+
+``partial_fit`` warm-starts from the current coefficients via the
+harness's snapshot rotation: the outer-loop engine computes the full
+gradient at ``init_w`` before the first epoch, so continuing a run is
+exactly "one more rotation" of the same machinery — no cold restart, no
+re-deriving state.  Each call advances the seed so the sample stream
+does not replay.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.api.registry import solve
+from repro.api.spec import PAPER, ExperimentSpec
+from repro.core import losses as losses_lib
+from repro.core.driver import OuterRecord
+from repro.data.sparse import PaddedCSR, margins
+
+
+def as_padded_csr(X, y=None) -> PaddedCSR:
+    """Coerce estimator input to a PaddedCSR.
+
+    * ``X`` already a PaddedCSR: returned as-is (``y``, if given, must
+      match its stored labels' length).
+    * ``X`` a dense ``[n, d]`` array with labels ``y``: converted to a
+      padded sparse layout with the per-row maximum nnz as the budget.
+    """
+    if isinstance(X, PaddedCSR):
+        if y is not None and len(y) != X.num_instances:
+            raise ValueError(
+                f"y has {len(y)} labels but the PaddedCSR holds "
+                f"{X.num_instances} instances"
+            )
+        return X
+    X = np.asarray(X)
+    if X.ndim != 2:
+        raise ValueError(f"X must be [n_samples, n_features], got {X.shape}")
+    if y is None:
+        raise ValueError("dense X requires y")
+    n, d = X.shape
+    if len(np.asarray(y)) != n:
+        raise ValueError(
+            f"y has {len(np.asarray(y))} labels but X holds {n} instances"
+        )
+    # Floating inputs keep their dtype (a float64 study stays float64 when
+    # jax x64 is enabled — no silent demotion); anything else runs float32.
+    dtype = X.dtype if np.issubdtype(X.dtype, np.floating) else np.float32
+    nnz_rows = np.count_nonzero(X, axis=1)
+    budget = max(1, int(nnz_rows.max())) if n else 1
+    indices = np.zeros((n, budget), dtype=np.int32)
+    values = np.zeros((n, budget), dtype=dtype)
+    # One vectorized pack (mirrors PaddedCSR.to_dense's single np.add.at):
+    # np.nonzero is row-major, so positions within each row are the running
+    # index minus the row's starting offset.
+    rows, cols = np.nonzero(X)
+    pos = np.arange(rows.size) - np.repeat(
+        np.cumsum(nnz_rows) - nnz_rows, nnz_rows
+    )
+    indices[rows, pos] = cols
+    values[rows, pos] = X[rows, cols]
+    return PaddedCSR(
+        indices=jnp.asarray(indices),
+        values=jnp.asarray(values),
+        labels=jnp.asarray(np.asarray(y, dtype=dtype)),
+        dim=d,
+    )
+
+
+class FDSVRGClassifier:
+    """Binary linear classifier trained by any registered solver.
+
+    Parameters mirror :class:`~repro.api.spec.ExperimentSpec`; the
+    defaults are the registry's per-method ``"paper"`` operating point.
+    Labels may be any two values; they are mapped onto {-1, +1}
+    internally (sorted order) and mapped back by :meth:`predict`.
+    """
+
+    def __init__(
+        self,
+        *,
+        method: str = "fdsvrg",
+        workers: int | None = None,
+        eta: float | str = PAPER,
+        reg: str = "l2",
+        lam: float = 1e-4,
+        lam2: float = 0.0,
+        loss: str = "logistic",
+        batch_size: int | str = PAPER,
+        inner_steps: int | str = PAPER,
+        outer_iters: int = 10,
+        option: str = "I",
+        seed: int = 0,
+        use_kernels: bool = False,
+        cluster=None,
+    ) -> None:
+        self.method = method
+        self.workers = workers
+        self.eta = eta
+        self.reg = reg
+        self.lam = lam
+        self.lam2 = lam2
+        self.loss = loss
+        self.batch_size = batch_size
+        self.inner_steps = inner_steps
+        self.outer_iters = outer_iters
+        self.option = option
+        self.seed = seed
+        self.use_kernels = use_kernels
+        self.cluster = cluster
+        self._fits = 0
+
+    # -- sklearn-style attributes set by fit: coef_, classes_, history_ --
+
+    @property
+    def is_fitted(self) -> bool:
+        return getattr(self, "coef_", None) is not None
+
+    def _spec(self, data: PaddedCSR, outer_iters: int, init_w) -> ExperimentSpec:
+        return ExperimentSpec(
+            method=self.method,
+            data=data,
+            loss=self.loss,
+            reg=losses_lib.Regularizer(self.reg, self.lam, self.lam2),
+            q=self.workers,
+            eta=self.eta,
+            batch_size=self.batch_size,
+            inner_steps=self.inner_steps,
+            outer_iters=outer_iters,
+            option=self.option,
+            # advance the stream per call so partial_fit never replays
+            # the previous call's samples
+            seed=self.seed + self._fits,
+            use_kernels=self.use_kernels,
+            cluster=self.cluster,
+            init_w=init_w,
+        )
+
+    def _encode_labels(self, raw) -> np.ndarray:
+        """Map arbitrary binary labels (any dtype, including strings) onto
+        the {-1,+1} the losses expect, recording ``classes_``."""
+        raw = np.asarray(raw)
+        classes = np.unique(raw)
+        if classes.size != 2:
+            raise ValueError(
+                f"binary classification requires exactly 2 classes, got "
+                f"{classes.size}"
+            )
+        if self.is_fitted and not np.array_equal(classes, self.classes_):
+            raise ValueError(
+                f"classes {classes} differ from the fitted {self.classes_}"
+            )
+        self.classes_ = classes
+        return np.where(raw == classes[1], 1.0, -1.0).astype(np.float32)
+
+    def _encoded_data(self, X, y) -> PaddedCSR:
+        """The training PaddedCSR with ±1 labels.  Labels are encoded
+        BEFORE any dense->sparse conversion (so non-numeric label values
+        work for dense input too), and the result is memoized per input
+        object: repeated partial_fit on the same (X, y) reuses ONE data
+        object, which is what keeps the id()-keyed BlockCSR cache hitting
+        across warm-start calls instead of re-indexing every time."""
+        cached = getattr(self, "_encoded", None)
+        if cached is not None and cached[0] is X and cached[1] is y:
+            return cached[2]
+        if isinstance(X, PaddedCSR):
+            as_padded_csr(X, y)  # one home for the y-length validation
+            signed = self._encode_labels(X.labels if y is None else y)
+            if np.array_equal(signed, np.asarray(X.labels)):
+                data = X
+            else:
+                # labels follow the data's values dtype — a re-encoded
+                # float64 run must not silently go mixed-precision
+                data = PaddedCSR(
+                    indices=X.indices, values=X.values,
+                    labels=jnp.asarray(signed, X.values.dtype), dim=X.dim,
+                )
+        else:
+            if y is None:
+                raise ValueError("dense X requires y")
+            data = as_padded_csr(X, self._encode_labels(y))
+        # Strong refs to the inputs: identity keys stay valid (no id()
+        # recycling), and repeated partial_fit on the same objects reuses
+        # one encoded data set.
+        self._encoded = (X, y, data)
+        return data
+
+    def fit(self, X, y=None) -> "FDSVRGClassifier":
+        """Train from scratch for ``outer_iters`` outer iterations."""
+        self.coef_ = None
+        self.history_: list[OuterRecord] = []
+        self._fits = 0
+        self._encoded = None
+        return self.partial_fit(X, y, outer_iters=self.outer_iters)
+
+    def partial_fit(self, X, y=None, *, outer_iters: int = 1) -> "FDSVRGClassifier":
+        """Continue training from the current coefficients (warm start via
+        the harness's snapshot rotation); trains from zeros if unfitted."""
+        data = self._encoded_data(X, y)
+        if not hasattr(self, "history_"):
+            self.history_ = []
+        init_w = jnp.asarray(self.coef_) if self.is_fitted else None
+        result = solve(self._spec(data, outer_iters, init_w))
+        self._fits += 1
+        self.coef_ = np.asarray(result.w)
+        self.n_features_in_ = data.dim
+        # Each solve() starts a fresh meter/clock, so rebase ALL the
+        # cumulative fields — not just the outer index — onto the previous
+        # history's totals: history_ then reads as one continuous run
+        # (comm/time never step backwards at a warm-start boundary).
+        if self.history_:
+            last = self.history_[-1]
+            base, scal0, rnd0, mod0, wall0 = (
+                last.outer + 1, last.comm_scalars, last.comm_rounds,
+                last.modeled_time_s, last.wall_time_s,
+            )
+        else:
+            base, scal0, rnd0, mod0, wall0 = 0, 0, 0, 0.0, 0.0
+        self.history_.extend(
+            OuterRecord(base + h.outer, h.objective, h.grad_norm,
+                        scal0 + h.comm_scalars, rnd0 + h.comm_rounds,
+                        mod0 + h.modeled_time_s, wall0 + h.wall_time_s)
+            for h in result.history
+        )
+        self.result_ = result
+        return self
+
+    def free_training_cache(self) -> "FDSVRGClassifier":
+        """Release the memoized training data (serving: a fitted estimator
+        keeps only ``coef_``/``classes_``/``history_``).  The next
+        ``partial_fit`` re-encodes from its inputs."""
+        self._encoded = None
+        self.result_ = None
+        return self
+
+    def _check_fitted(self) -> None:
+        if not self.is_fitted:
+            raise ValueError("this FDSVRGClassifier is not fitted yet")
+
+    def decision_function(self, X) -> np.ndarray:
+        """Margins ``w^T x_i``; positive means ``classes_[1]``."""
+        self._check_fitted()
+        if isinstance(X, PaddedCSR):
+            return np.asarray(margins(X, jnp.asarray(self.coef_)))
+        X = np.asarray(X)
+        return X @ self.coef_
+
+    def predict(self, X) -> np.ndarray:
+        self._check_fitted()
+        return self.classes_[(self.decision_function(X) > 0).astype(int)]
+
+    def score(self, X, y=None) -> float:
+        """Mean accuracy on ``(X, y)``.  ``y=None`` uses a PaddedCSR's own
+        stored labels; if the model was fitted on classes other than the
+        stored ±1 coding, the ±1 labels are decoded through ``classes_``
+        (same convention as the fit-time encoding: +1 is ``classes_[1]``)
+        so the comparison happens in one label space."""
+        if y is None:
+            if not isinstance(X, PaddedCSR):
+                raise ValueError("score() needs y unless X is a PaddedCSR")
+            y = np.asarray(X.labels)
+            if self.is_fitted and not np.isin(y, self.classes_).all():
+                if set(np.unique(y)) <= {-1.0, 1.0}:
+                    y = self.classes_[(y > 0).astype(int)]
+                else:
+                    raise ValueError(
+                        f"the PaddedCSR's labels are neither the fitted "
+                        f"classes {self.classes_} nor ±1-coded; pass y "
+                        "explicitly"
+                    )
+        return float(np.mean(self.predict(X) == np.asarray(y)))
+
+    def final_objective(self) -> float:
+        self._check_fitted()
+        return self.history_[-1].objective

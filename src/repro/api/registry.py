@@ -1,0 +1,395 @@
+"""The solver registry: one ``solve(spec) -> RunResult`` over all seven
+optimizer drivers.
+
+Every driver in :mod:`repro.core` registers here under a method name with
+a :class:`MethodInfo` capability record; :func:`solve` is the single
+front door that
+
+* loads the data set (or takes the spec's in-memory one),
+* resolves the ``"paper"`` auto-defaults per method — the per-method step
+  sizes, the trajectory mini-batch, and the inner-step rules
+  (FD: ``m = N/u``; DSVRG/Syn: ``m = N/q``; serial/PS: ``m = N``),
+  capped at :data:`PAPER_MAX_INNER` — conventions that used to live as
+  module constants inside ``benchmarks/common.py``,
+* validates the spec against the method's capabilities and fails loudly
+  on mismatches (``use_kernels`` on a driver without a kernel path, a
+  mesh on a non-shard_map method, Option II on a driver that ignores it),
+* owns partition building and BlockCSR caching (the shared bounded
+  :data:`repro.api.cache.BLOCK_CACHE`),
+* dispatches to the registered driver and returns its
+  :class:`~repro.core.driver.RunResult` — the same history schema for
+  every method, so callers compare like-for-like.
+
+Method names (the seven drivers; the async pair shares one driver):
+
+====================  ====================================================
+``serial``            Algorithm 2 (Johnson & Zhang), the proof reference
+``fdsvrg``            Algorithm 1, jitted metered simulation
+``fdsvrg_sim``        Algorithm 1, explicit q-worker object simulation
+``fdsvrg_sharded``    Algorithm 1, deployable shard_map over a mesh
+``dsvrg``             DSVRG (Lee et al.), instance-sharded ring
+``synsvrg``           SynSVRG on a parameter server (App. B)
+``asysvrg``           AsySVRG on a parameter server (App. B)
+``pslite_sgd``        PS-Lite asynchronous SGD (no variance reduction)
+====================  ====================================================
+
+New methods register with :func:`register_method`; nothing else in the
+repo needs to change for them to be reachable from the CLI, the
+estimator, and the benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+from repro.api.cache import BLOCK_CACHE
+from repro.api.spec import PAPER, ExperimentSpec
+from repro.core import baselines
+from repro.core import losses as losses_lib
+from repro.core.driver import RunResult
+from repro.core.fdsvrg import (
+    SVRGConfig,
+    fdsvrg_worker_simulation,
+    run_fdsvrg,
+    run_serial_svrg,
+)
+from repro.core.fdsvrg_shardmap import FDSVRGShardedConfig, run_fdsvrg_sharded
+from repro.core.partition import balanced
+from repro.data import datasets
+from repro.dist import SimBackend, make_mesh
+
+#: Cap on inner steps per outer for the scaled trajectories of the largest
+#: sets (url/kdd) — subsampled epochs, noted in EXPERIMENTS.md.
+PAPER_MAX_INNER = 12_000
+
+#: Scaled-trajectory mini-batch for the FD family (keeps big-set scans
+#: tractable; the paper's §4.4.1 mini-batch trick).
+PAPER_FD_BATCH = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodInfo:
+    """Capability record + paper operating point of one registered method."""
+
+    name: str
+    run: Callable  # (spec, data, resolved, mesh) -> RunResult
+    backend: str  # backend family: "none" | "sim" | "shardmap"
+    supports_kernels: bool
+    supports_prox: bool = True
+    supports_option_ii: bool = True
+    needs_mesh: bool = False
+    # "paper" auto-default operating point (tuned on the scaled sets,
+    # fixed like the paper; lifted from benchmarks/common.py):
+    paper_eta: float = 1.0
+    paper_batch: int = 1
+    inner_rule: str = "n"  # "n" | "n_over_u" | "n_over_q"
+    summary: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedRun:
+    """Concrete numbers after ``"paper"`` resolution, handed to adapters."""
+
+    eta: float
+    batch_size: int
+    inner_steps: int
+    q: int
+
+
+METHODS: dict[str, MethodInfo] = {}
+
+
+def register_method(
+    name: str,
+    *,
+    backend: str,
+    supports_kernels: bool,
+    supports_prox: bool = True,
+    supports_option_ii: bool = True,
+    needs_mesh: bool = False,
+    paper_eta: float,
+    paper_batch: int = 1,
+    inner_rule: str,
+    summary: str = "",
+) -> Callable:
+    """Decorator registering a driver adapter under ``name``.
+
+    The adapter receives ``(spec, data, resolved, mesh)`` — the validated
+    spec, the loaded data set, the resolved numeric parameters, and (for
+    ``needs_mesh`` methods) the mesh — and returns a ``RunResult``.
+    """
+    if inner_rule not in ("n", "n_over_u", "n_over_q"):
+        raise ValueError(f"unknown inner_rule {inner_rule!r}")
+
+    def deco(fn: Callable) -> Callable:
+        if name in METHODS:
+            raise ValueError(f"method {name!r} is already registered")
+        METHODS[name] = MethodInfo(
+            name=name,
+            run=fn,
+            backend=backend,
+            supports_kernels=supports_kernels,
+            supports_prox=supports_prox,
+            supports_option_ii=supports_option_ii,
+            needs_mesh=needs_mesh,
+            paper_eta=paper_eta,
+            paper_batch=paper_batch,
+            inner_rule=inner_rule,
+            summary=summary
+            or ((fn.__doc__ or "").strip().splitlines() or [""])[0],
+        )
+        return fn
+
+    return deco
+
+
+def method_info(name: str) -> MethodInfo:
+    try:
+        return METHODS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; registered methods: "
+            f"{', '.join(sorted(METHODS))}"
+        ) from None
+
+
+def _validate(spec: ExperimentSpec, info: MethodInfo) -> None:
+    """Capability checks — every mismatch is a loud error, never a
+    silently ignored flag."""
+    if spec.use_kernels and not info.supports_kernels:
+        raise ValueError(
+            f"method {info.name!r} does not support use_kernels=True "
+            f"(kernel-path methods: "
+            f"{', '.join(sorted(m for m, i in METHODS.items() if i.supports_kernels))}). "
+            "The flag would previously have been silently ignored; it now "
+            "fails here so a benchmark that believes it measured the Pallas "
+            "path actually did."
+        )
+    if not spec.reg.is_smooth and not info.supports_prox:
+        raise ValueError(
+            f"method {info.name!r} does not support the proximal "
+            f"regularizer family (got reg={spec.reg.name!r})"
+        )
+    if spec.option == "II" and not info.supports_option_ii:
+        raise ValueError(
+            f"method {info.name!r} ignores the Option I/II step mask; "
+            "option='II' would not be honored — run Option I or use a "
+            "driver that supports it"
+        )
+    if spec.mesh is not None and not info.needs_mesh:
+        raise ValueError(
+            f"method {info.name!r} does not run on a mesh; mesh= is only "
+            "meaningful for shard_map methods (fdsvrg_sharded)"
+        )
+    if spec.tree_mode != "psum" and not info.needs_mesh:
+        raise ValueError(
+            f"method {info.name!r} does not consume tree_mode="
+            f"{spec.tree_mode!r}; the collective topology is a shard_map "
+            "knob (fdsvrg_sharded) — it would not be honored here"
+        )
+
+
+def _resolve(
+    spec: ExperimentSpec, info: MethodInfo, n: int, q: int
+) -> ResolvedRun:
+    """Turn ``"paper"`` sentinels into numbers with the per-method rules."""
+    eta = info.paper_eta if spec.eta == PAPER else float(spec.eta)
+    u = info.paper_batch if spec.batch_size == PAPER else int(spec.batch_size)
+    if spec.inner_steps == PAPER:
+        if info.inner_rule == "n_over_u":
+            m = min(max(1, n // u), PAPER_MAX_INNER)
+        elif info.inner_rule == "n_over_q":
+            m = min(max(1, n // q), PAPER_MAX_INNER)
+        else:  # "n"
+            m = min(n, PAPER_MAX_INNER)
+    else:
+        m = int(spec.inner_steps)
+    return ResolvedRun(eta=eta, batch_size=u, inner_steps=m, q=q)
+
+
+@functools.lru_cache(maxsize=4)
+def _load_dataset(name: str):
+    """Memoized :func:`repro.data.datasets.load`: dataset-name specs get
+    the SAME data object across solve() calls, so the id()-keyed
+    BlockCSR cache actually hits for sweeps built on ``spec.replace`` —
+    a fresh load per call would both regenerate the data and evict the
+    cache every time."""
+    return datasets.load(name)
+
+
+def solve(spec: ExperimentSpec) -> RunResult:
+    """Run ``spec`` through its registered driver; the ONE front door.
+
+    Returns the driver's :class:`~repro.core.driver.RunResult` — final
+    iterate, per-outer history (objective, optimality residual, metered
+    communication, modeled and wall-clock time), and the run's meter.
+    """
+    info = method_info(spec.method)
+    _validate(spec, info)
+    data = spec.data if spec.data is not None else _load_dataset(spec.dataset)
+    mesh = None
+    if info.needs_mesh:
+        mesh = spec.mesh if spec.mesh is not None else make_mesh((1,), ("model",))
+        q = int(mesh.devices.size)
+        if spec.q is not None and spec.q != q:
+            raise ValueError(
+                f"q={spec.q} disagrees with the mesh's {q} device(s); for "
+                f"{info.name!r} the worker count IS the mesh size — pass a "
+                "bigger mesh, not a bigger q"
+            )
+    elif spec.q is not None:
+        q = spec.q
+    elif spec.dataset is not None:
+        q = datasets.spec(spec.dataset).default_workers
+    else:
+        q = 1
+    resolved = _resolve(spec, info, data.num_instances, q)
+    return info.run(spec, data, resolved, mesh)
+
+
+def capability_matrix() -> list[dict]:
+    """Rows for the docs/CLI capability table, in registration order."""
+    return [
+        {
+            "method": i.name,
+            "backend": i.backend,
+            "kernels": i.supports_kernels,
+            "prox": i.supports_prox,
+            "option_II": i.supports_option_ii,
+            "mesh": i.needs_mesh,
+            "paper_eta": i.paper_eta,
+            "paper_batch": i.paper_batch,
+            "inner_rule": i.inner_rule,
+            "summary": i.summary,
+        }
+        for i in METHODS.values()
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Adapters: the seven drivers, registered
+# ---------------------------------------------------------------------------
+
+
+def _svrg_config(spec: ExperimentSpec, p: ResolvedRun) -> SVRGConfig:
+    return SVRGConfig(
+        eta=p.eta,
+        inner_steps=p.inner_steps,
+        outer_iters=spec.outer_iters,
+        batch_size=p.batch_size,
+        option=spec.option,
+        seed=spec.seed,
+    )
+
+
+@register_method(
+    "serial", backend="none", supports_kernels=True,
+    paper_eta=2.0, inner_rule="n",
+    summary="Algorithm 2 (serial SVRG), the proof reference",
+)
+def _solve_serial(spec, data, p, mesh) -> RunResult:
+    return run_serial_svrg(
+        data, losses_lib.LOSSES[spec.loss], spec.reg, _svrg_config(spec, p),
+        use_kernels=spec.use_kernels, init_w=spec.init_w,
+    )
+
+
+@register_method(
+    "fdsvrg", backend="sim", supports_kernels=True,
+    paper_eta=2.0, paper_batch=PAPER_FD_BATCH, inner_rule="n_over_u",
+    summary="Algorithm 1 (FD-SVRG), jitted metered simulation",
+)
+def _solve_fdsvrg(spec, data, p, mesh) -> RunResult:
+    return run_fdsvrg(
+        data, balanced(data.dim, p.q), losses_lib.LOSSES[spec.loss], spec.reg,
+        _svrg_config(spec, p), spec.cluster,
+        use_kernels=spec.use_kernels,
+        block_data=BLOCK_CACHE.get(data, p.q),
+        init_w=spec.init_w,
+    )
+
+
+@register_method(
+    "fdsvrg_sim", backend="sim", supports_kernels=True,
+    paper_eta=2.0, paper_batch=PAPER_FD_BATCH, inner_rule="n_over_u",
+    summary="Algorithm 1, explicit q-worker object-level simulation",
+)
+def _solve_fdsvrg_sim(spec, data, p, mesh) -> RunResult:
+    return fdsvrg_worker_simulation(
+        data, balanced(data.dim, p.q), losses_lib.LOSSES[spec.loss], spec.reg,
+        _svrg_config(spec, p), SimBackend(p.q, spec.cluster),
+        use_kernels=spec.use_kernels,
+        block_data=BLOCK_CACHE.get(data, p.q),
+        init_w=spec.init_w,
+    )
+
+
+@register_method(
+    "fdsvrg_sharded", backend="shardmap",
+    # The shard_map worker has a kernel path, but solve() does not expose
+    # it yet: Pallas-inside-shard_map is only exercised by the dedicated
+    # perf harness (launch/perf), not certified through this front door —
+    # so the honest capability today is False, and asking for it errors
+    # instead of silently running the jnp path.
+    supports_kernels=False,
+    supports_option_ii=False,  # the sharded inner scan has no step mask
+    needs_mesh=True,
+    paper_eta=2.0, paper_batch=PAPER_FD_BATCH, inner_rule="n_over_u",
+    summary="Algorithm 1, deployable shard_map over the mesh's feature axes",
+)
+def _solve_fdsvrg_sharded(spec, data, p, mesh) -> RunResult:
+    cfg = FDSVRGShardedConfig(
+        dim=data.dim,
+        num_instances=data.num_instances,
+        nnz_max=data.nnz_max,
+        eta=p.eta,
+        inner_steps=p.inner_steps,
+        batch_size=p.batch_size,
+        loss_name=spec.loss,
+        reg_name=spec.reg.name,
+        lam=spec.reg.lam,
+        lam2=spec.reg.lam2,
+        tree_mode=spec.tree_mode,
+    )
+    return run_fdsvrg_sharded(
+        data, mesh, cfg, feature_axes=tuple(mesh.axis_names),
+        outer_iters=spec.outer_iters, seed=spec.seed, cluster=spec.cluster,
+        init_w=spec.init_w,
+    )
+
+
+def _register_baseline(name, runner, *, paper_eta, inner_rule, supports_option_ii=True, summary):
+    @register_method(
+        name, backend="sim", supports_kernels=False,
+        supports_option_ii=supports_option_ii,
+        paper_eta=paper_eta, inner_rule=inner_rule, summary=summary,
+    )
+    def _solve_baseline(spec, data, p, mesh) -> RunResult:
+        return runner(
+            data, p.q, losses_lib.LOSSES[spec.loss], spec.reg,
+            _svrg_config(spec, p), spec.cluster, init_w=spec.init_w,
+        )
+
+    return _solve_baseline
+
+
+_register_baseline(
+    "dsvrg", baselines.run_dsvrg, paper_eta=1.0, inner_rule="n_over_q",
+    summary="DSVRG (Lee et al.), instance-sharded ring",
+)
+_register_baseline(
+    "synsvrg", baselines.run_syn_svrg, paper_eta=2.0, inner_rule="n_over_q",
+    summary="SynSVRG on a parameter server (App. B, Alg 3/4)",
+)
+_register_baseline(
+    "asysvrg", baselines.run_asy_svrg, paper_eta=0.5, inner_rule="n",
+    supports_option_ii=False,  # the async scan draws no step mask
+    summary="AsySVRG on a parameter server (App. B, Alg 5/6)",
+)
+_register_baseline(
+    "pslite_sgd", baselines.run_pslite_sgd, paper_eta=0.3, inner_rule="n",
+    supports_option_ii=False,
+    summary="PS-Lite asynchronous SGD, no variance reduction",
+)

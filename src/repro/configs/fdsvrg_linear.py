@@ -31,6 +31,31 @@ class LinearConfig:
     def regularizer(self) -> losses.Regularizer:
         return losses.Regularizer(self.reg, self.lam, self.lam2)
 
+    def to_spec(self, method: str = "fdsvrg", **overrides):
+        """This config as an :class:`repro.api.ExperimentSpec` for any
+        registered method — the bridge from the paper's presets to the
+        one front door (``solve(cfg.to_spec(method="dsvrg"))``).
+
+        Keyword ``overrides`` replace any spec field (e.g.
+        ``outer_iters=2, inner_steps=300`` for a smoke run); the
+        config's own eta/batch/workers are the paper's operating point,
+        not the registry's scaled-trajectory ``"paper"`` defaults.
+        """
+        from repro.api.spec import ExperimentSpec  # deferred: configs load early
+
+        kw = dict(
+            method=method,
+            dataset=self.dataset,
+            loss=self.loss,
+            reg=self.regularizer(),
+            q=self.workers,
+            eta=self.eta,
+            batch_size=self.batch_size,
+            outer_iters=self.outer_iters,
+        )
+        kw.update(overrides)
+        return ExperimentSpec(**kw)
+
 
 CONFIGS = {
     "fdsvrg-news20": LinearConfig("fdsvrg-news20", "news20", workers=8),

@@ -35,6 +35,7 @@ from repro.core import losses as losses_lib
 from repro.core.driver import (
     make_same_iterate_eval,
     option_mask,
+    resolve_init_w,
     run_outer_loop,
 )
 from repro.core.fdsvrg import (
@@ -71,6 +72,8 @@ def run_dsvrg(
     cfg: SVRGConfig,
     cluster: ClusterModel | None = None,
     backend: Collectives | None = None,
+    *,
+    init_w: jax.Array | None = None,
 ) -> RunResult:
     backend = backend or SimBackend(q, cluster)
     n, d, nnz = data.num_instances, data.dim, data.nnz_max
@@ -109,7 +112,7 @@ def run_dsvrg(
     return run_outer_loop(
         outer_iters=cfg.outer_iters,
         seed=cfg.seed,
-        init_w=jnp.zeros((d,), dtype=data.values.dtype),
+        init_w=resolve_init_w(init_w, d, data.values.dtype),
         snapshot=snapshot,
         epoch=epoch,
         evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
@@ -130,6 +133,8 @@ def run_syn_svrg(
     cfg: SVRGConfig,
     cluster: ClusterModel | None = None,
     backend: Collectives | None = None,
+    *,
+    init_w: jax.Array | None = None,
 ) -> RunResult:
     backend = backend or SimBackend(q, cluster)
     n, d, nnz = data.num_instances, data.dim, data.nnz_max
@@ -163,7 +168,7 @@ def run_syn_svrg(
     return run_outer_loop(
         outer_iters=cfg.outer_iters,
         seed=cfg.seed,
-        init_w=jnp.zeros((d,), dtype=data.values.dtype),
+        init_w=resolve_init_w(init_w, d, data.values.dtype),
         snapshot=snapshot,
         epoch=epoch,
         evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
@@ -243,6 +248,7 @@ def _run_async(
     backend: Collectives,
     variance_reduced: bool,
     kind: str,
+    init_w: jax.Array | None = None,
 ) -> RunResult:
     n, d, nnz = data.num_instances, data.dim, data.nnz_max
     delay_buf = max(2, q)
@@ -292,7 +298,7 @@ def _run_async(
     return run_outer_loop(
         outer_iters=cfg.outer_iters,
         seed=cfg.seed,
-        init_w=jnp.zeros((d,), dtype=data.values.dtype),
+        init_w=resolve_init_w(init_w, d, data.values.dtype),
         snapshot=snapshot,
         epoch=epoch,
         evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
@@ -300,11 +306,13 @@ def _run_async(
     )
 
 
-def run_asy_svrg(data, q, loss, reg, cfg, cluster=None, backend=None) -> RunResult:
+def run_asy_svrg(data, q, loss, reg, cfg, cluster=None, backend=None, *,
+                 init_w=None) -> RunResult:
     return _run_async(data, q, loss, reg, cfg, backend or SimBackend(q, cluster),
-                      variance_reduced=True, kind="asysvrg")
+                      variance_reduced=True, kind="asysvrg", init_w=init_w)
 
 
-def run_pslite_sgd(data, q, loss, reg, cfg, cluster=None, backend=None) -> RunResult:
+def run_pslite_sgd(data, q, loss, reg, cfg, cluster=None, backend=None, *,
+                   init_w=None) -> RunResult:
     return _run_async(data, q, loss, reg, cfg, backend or SimBackend(q, cluster),
-                      variance_reduced=False, kind="pslite")
+                      variance_reduced=False, kind="pslite", init_w=init_w)

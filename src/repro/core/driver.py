@@ -150,6 +150,23 @@ def make_same_iterate_eval(
 # ---------------------------------------------------------------------------
 
 
+def resolve_init_w(
+    init_w: jax.Array | None, dim: int, dtype
+) -> jax.Array:
+    """The starting iterate every driver shares: zeros unless the caller
+    warm-starts (``repro.api`` threads ``FDSVRGClassifier.partial_fit``'s
+    coefficients through here), always in the data's dtype so a warm
+    start can't silently promote a float32 run to float64."""
+    if init_w is None:
+        return jnp.zeros((dim,), dtype=dtype)
+    init_w = jnp.asarray(init_w, dtype=dtype)
+    if init_w.shape != (dim,):
+        raise ValueError(
+            f"init_w has shape {init_w.shape}, expected ({dim},)"
+        )
+    return init_w
+
+
 def draw_samples(rng: np.random.Generator, n: int, m: int, u: int) -> np.ndarray:
     """M mini-batches of u uniform instance ids (the paper's sampling)."""
     return rng.integers(0, n, size=(m, u), dtype=np.int64).astype(np.int32)

@@ -57,6 +57,7 @@ from repro.core.driver import (
     objective_from_margins,
     optimality_norm,
     option_mask,
+    resolve_init_w,
     run_outer_loop,
 )
 from repro.core.partition import FeaturePartition, balanced
@@ -299,6 +300,7 @@ def run_serial_svrg(
     cfg: SVRGConfig,
     *,
     use_kernels: bool = False,
+    init_w: jax.Array | None = None,
 ) -> RunResult:
     # The q=1 BlockCSR shares the PaddedCSR arrays (local ids == global).
     block_data = BlockCSR.from_padded(data, balanced(data.dim, 1))
@@ -326,7 +328,7 @@ def run_serial_svrg(
     return run_outer_loop(
         outer_iters=cfg.outer_iters,
         seed=cfg.seed,
-        init_w=jnp.zeros((data.dim,), dtype=data.values.dtype),
+        init_w=resolve_init_w(init_w, data.dim, data.values.dtype),
         snapshot=snapshot,
         epoch=epoch,
         evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
@@ -349,6 +351,7 @@ def run_fdsvrg(
     *,
     use_kernels: bool = False,
     block_data: BlockCSR | None = None,
+    init_w: jax.Array | None = None,
 ) -> RunResult:
     """Algorithm 1 with q = partition.num_blocks feature-sharded workers.
 
@@ -412,7 +415,7 @@ def run_fdsvrg(
     return run_outer_loop(
         outer_iters=cfg.outer_iters,
         seed=cfg.seed,
-        init_w=jnp.zeros((data.dim,), dtype=data.values.dtype),
+        init_w=resolve_init_w(init_w, data.dim, data.values.dtype),
         snapshot=snapshot,
         epoch=epoch,
         evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
@@ -463,6 +466,8 @@ def fdsvrg_worker_simulation(
     backend: Collectives | None = None,
     *,
     use_kernels: bool = False,
+    block_data: BlockCSR | None = None,
+    init_w: jax.Array | None = None,
 ) -> RunResult:
     """Object-level Algorithm 1: a list of per-worker states; every
     inner-loop cross-worker scalar passes through ``backend.all_reduce``
@@ -479,7 +484,10 @@ def fdsvrg_worker_simulation(
     """
     q = partition.num_blocks
     backend = backend or SimBackend(q)
-    block_data = BlockCSR.from_padded(data, partition)
+    if block_data is None:
+        block_data = BlockCSR.from_padded(data, partition)
+    elif block_data.partition.bounds != partition.bounds:
+        raise ValueError("block_data was built for a different partition")
     block_dims = block_data.block_dims
     bounds = _bounds(block_dims)
     n = data.num_instances
@@ -541,7 +549,7 @@ def fdsvrg_worker_simulation(
     return run_outer_loop(
         outer_iters=cfg.outer_iters,
         seed=cfg.seed,
-        init_w=jnp.zeros((data.dim,), dtype=data.values.dtype),
+        init_w=resolve_init_w(init_w, data.dim, data.values.dtype),
         snapshot=snapshot,
         epoch=epoch,
         evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),

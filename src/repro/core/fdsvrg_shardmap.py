@@ -58,6 +58,7 @@ from repro.core import losses as losses_lib
 from repro.core.driver import (
     draw_samples,
     make_same_iterate_eval,
+    resolve_init_w,
     run_outer_loop,
 )
 from repro.core.partition import balanced
@@ -289,6 +290,7 @@ def run_fdsvrg_sharded(
     seed: int = 0,
     cluster: ClusterModel | None = None,
     backend: ShardMapBackend | None = None,
+    init_w: jax.Array | None = None,
 ):
     """Metered driver for the deployable path, on the shared harness.
 
@@ -337,7 +339,7 @@ def run_fdsvrg_sharded(
     return run_outer_loop(
         outer_iters=outer_iters,
         seed=seed,
-        init_w=jnp.zeros((cfg.dim,), data.values.dtype),
+        init_w=resolve_init_w(init_w, cfg.dim, data.values.dtype),
         snapshot=snapshot,
         epoch=epoch,
         evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),

@@ -11,8 +11,10 @@ Load-bearing properties after the driver-drift refactor:
 2. **Harness semantics** — snapshot rotation (one extra full gradient per
    run, post-epoch z/w pairs), same-iterate reporting for every driver
    including PS-Lite, and the shared rng-stream conventions.
-3. Satellites: the `_inner_epoch` recompile fix (lam traced), the bounded
-   benchmarks block cache, and `use_kernels` plumbed through run_method.
+3. Satellites: the `_inner_epoch` recompile fix (lam traced) and
+   `use_kernels` plumbed through run_method.  (The BlockCSR cache tests
+   moved to tests/test_api.py with the cache itself — it now lives in
+   repro.api.cache.)
 """
 
 import jax.numpy as jnp
@@ -288,30 +290,6 @@ def test_inner_epoch_kernels_require_static_lams(data):
             jnp.zeros((2, 1), jnp.int32), 0.1, jnp.ones(2, jnp.float32),
             "logistic", "l2", 1e-3, block.block_dims, True,
         )
-
-
-def test_block_cache_bounded_and_per_sweep(data):
-    """A second data set evicts the first (per-sweep scope), and the
-    entry count stays bounded even for many q values."""
-    import benchmarks.common as common
-
-    a = make_sparse_classification(dim=64, num_instances=8,
-                                   nnz_per_instance=4, seed=0)
-    b = make_sparse_classification(dim=64, num_instances=8,
-                                   nnz_per_instance=4, seed=1)
-    common._BLOCK_CACHE.clear()
-    blk_a2 = common._block_data(a, 2)
-    assert common._block_data(a, 2) is blk_a2  # hit
-    common._block_data(a, 4)
-    assert len(common._BLOCK_CACHE) == 2
-    common._block_data(b, 2)
-    # every surviving entry belongs to b: a's blocks were evicted
-    assert all(obj is b for obj, _ in common._BLOCK_CACHE.values())
-    # LRU bound holds for many q values of one data set
-    for q in (1, 2, 4, 8, 16, 32):
-        common._block_data(b, q)
-    assert len(common._BLOCK_CACHE) <= common._BLOCK_CACHE_MAX
-    common._BLOCK_CACHE.clear()
 
 
 @pytest.mark.parametrize("method", ["serial", "fdsvrg"])
