@@ -25,6 +25,7 @@ def main() -> None:
         convergence,
         kernels_bench,
         lambda_sensitivity,
+        lazy_bench,
         roofline,
         scalability,
         speedup,
@@ -90,6 +91,20 @@ def main() -> None:
     us = stamp("kernels_micro_total", t, f"{len(rows)} kernels")
     write_bench_json(
         "kernels", kernels_bench.report_payload(rows, blockcsr, us, args.quick)
+    )
+
+    t = time.perf_counter()
+    _, rows, lazy_summary = lazy_bench.run(quick=args.quick)
+    for r in rows:
+        print(",".join(map(str, r)))
+    us = stamp(
+        "lazy_inner_total", t,
+        f"proba {lazy_summary['inner_epoch']['speedup_proba']:.2f}x;"
+        f"bitwise={lazy_summary['inner_epoch']['exact_bitwise_equal']};"
+        f"comm_parity={lazy_summary['comm']['comm_parity']}",
+    )
+    write_bench_json(
+        "lazy", lazy_bench.report_payload(lazy_summary, us, args.quick)
     )
 
     t = time.perf_counter()

@@ -42,6 +42,9 @@ def _parser() -> argparse.ArgumentParser:
     p.add_argument("--workers", type=int, default=None)
     p.add_argument("--seed", type=int, default=None)
     p.add_argument("--use-kernels", action="store_true")
+    p.add_argument("--lazy-updates", choices=("exact", "proba"), default=None,
+                   help="O(nnz) delayed-decay inner steps (lazy-capable "
+                   "methods only)")
     p.add_argument("--quick", action="store_true",
                    help="CI smoke shape: 2 outers, inner loop capped at 300")
     p.add_argument("--list", action="store_true",
@@ -105,6 +108,8 @@ def main(argv: list[str] | None = None) -> int:
         overrides["seed"] = args.seed
     if args.use_kernels:
         overrides["use_kernels"] = True
+    if args.lazy_updates is not None:
+        overrides["lazy_updates"] = args.lazy_updates
     if args.quick:
         overrides.setdefault("outer_iters", 2)
         overrides.setdefault("inner_steps", min(300, PAPER_MAX_INNER))

@@ -103,6 +103,7 @@ class FDSVRGClassifier:
         option: str = "I",
         seed: int = 0,
         use_kernels: bool = False,
+        lazy_updates: str | None = None,
         cluster=None,
     ) -> None:
         self.method = method
@@ -118,6 +119,7 @@ class FDSVRGClassifier:
         self.option = option
         self.seed = seed
         self.use_kernels = use_kernels
+        self.lazy_updates = lazy_updates
         self.cluster = cluster
         self._fits = 0
 
@@ -143,6 +145,7 @@ class FDSVRGClassifier:
             # the previous call's samples
             seed=self.seed + self._fits,
             use_kernels=self.use_kernels,
+            lazy_updates=self.lazy_updates,
             cluster=self.cluster,
             init_w=init_w,
         )

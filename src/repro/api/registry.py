@@ -78,6 +78,7 @@ class MethodInfo:
     backend: str  # backend family: "none" | "sim" | "shardmap"
     supports_kernels: bool
     supports_prox: bool = True
+    supports_lazy: bool = False  # lazy O(nnz) delayed-decay inner steps
     supports_option_ii: bool = True
     needs_mesh: bool = False
     # "paper" auto-default operating point (tuned on the scaled sets,
@@ -107,6 +108,7 @@ def register_method(
     backend: str,
     supports_kernels: bool,
     supports_prox: bool = True,
+    supports_lazy: bool = False,
     supports_option_ii: bool = True,
     needs_mesh: bool = False,
     paper_eta: float,
@@ -132,6 +134,7 @@ def register_method(
             backend=backend,
             supports_kernels=supports_kernels,
             supports_prox=supports_prox,
+            supports_lazy=supports_lazy,
             supports_option_ii=supports_option_ii,
             needs_mesh=needs_mesh,
             paper_eta=paper_eta,
@@ -166,6 +169,14 @@ def _validate(spec: ExperimentSpec, info: MethodInfo) -> None:
             "The flag would previously have been silently ignored; it now "
             "fails here so a benchmark that believes it measured the Pallas "
             "path actually did."
+        )
+    if spec.lazy_updates is not None and not info.supports_lazy:
+        raise ValueError(
+            f"method {info.name!r} does not support lazy_updates="
+            f"{spec.lazy_updates!r} (lazy-capable methods: "
+            f"{', '.join(sorted(m for m, i in METHODS.items() if i.supports_lazy))}). "
+            "The delayed-decay replay only exists for the BlockCSR inner "
+            "scans; on any other driver the flag would be silently ignored."
         )
     if not spec.reg.is_smooth and not info.supports_prox:
         raise ValueError(
@@ -257,6 +268,7 @@ def capability_matrix() -> list[dict]:
             "backend": i.backend,
             "kernels": i.supports_kernels,
             "prox": i.supports_prox,
+            "lazy": i.supports_lazy,
             "option_II": i.supports_option_ii,
             "mesh": i.needs_mesh,
             "paper_eta": i.paper_eta,
@@ -285,19 +297,20 @@ def _svrg_config(spec: ExperimentSpec, p: ResolvedRun) -> SVRGConfig:
 
 
 @register_method(
-    "serial", backend="none", supports_kernels=True,
+    "serial", backend="none", supports_kernels=True, supports_lazy=True,
     paper_eta=2.0, inner_rule="n",
     summary="Algorithm 2 (serial SVRG), the proof reference",
 )
 def _solve_serial(spec, data, p, mesh) -> RunResult:
     return run_serial_svrg(
         data, losses_lib.LOSSES[spec.loss], spec.reg, _svrg_config(spec, p),
-        use_kernels=spec.use_kernels, init_w=spec.init_w,
+        use_kernels=spec.use_kernels, lazy_updates=spec.lazy_updates,
+        init_w=spec.init_w,
     )
 
 
 @register_method(
-    "fdsvrg", backend="sim", supports_kernels=True,
+    "fdsvrg", backend="sim", supports_kernels=True, supports_lazy=True,
     paper_eta=2.0, paper_batch=PAPER_FD_BATCH, inner_rule="n_over_u",
     summary="Algorithm 1 (FD-SVRG), jitted metered simulation",
 )
@@ -305,14 +318,14 @@ def _solve_fdsvrg(spec, data, p, mesh) -> RunResult:
     return run_fdsvrg(
         data, balanced(data.dim, p.q), losses_lib.LOSSES[spec.loss], spec.reg,
         _svrg_config(spec, p), spec.cluster,
-        use_kernels=spec.use_kernels,
+        use_kernels=spec.use_kernels, lazy_updates=spec.lazy_updates,
         block_data=BLOCK_CACHE.get(data, p.q),
         init_w=spec.init_w,
     )
 
 
 @register_method(
-    "fdsvrg_sim", backend="sim", supports_kernels=True,
+    "fdsvrg_sim", backend="sim", supports_kernels=True, supports_lazy=True,
     paper_eta=2.0, paper_batch=PAPER_FD_BATCH, inner_rule="n_over_u",
     summary="Algorithm 1, explicit q-worker object-level simulation",
 )
@@ -320,7 +333,7 @@ def _solve_fdsvrg_sim(spec, data, p, mesh) -> RunResult:
     return fdsvrg_worker_simulation(
         data, balanced(data.dim, p.q), losses_lib.LOSSES[spec.loss], spec.reg,
         _svrg_config(spec, p), SimBackend(p.q, spec.cluster),
-        use_kernels=spec.use_kernels,
+        use_kernels=spec.use_kernels, lazy_updates=spec.lazy_updates,
         block_data=BLOCK_CACHE.get(data, p.q),
         init_w=spec.init_w,
     )

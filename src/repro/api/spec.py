@@ -64,6 +64,10 @@ class ExperimentSpec:
     option: str = "I"  # Algorithm 2 Option I/II
     seed: int = 0
     use_kernels: bool = False
+    # Lazy O(nnz) inner steps (delayed-decay replay over BlockCSR):
+    # None -> the paper-faithful dense inner step; "exact" -> bitwise-
+    # equivalent catch-up replay; "proba" -> unbiased probabilistic decay.
+    lazy_updates: str | None = None
     cluster: ClusterModel | None = None  # None -> the backend's default
     init_w: jax.Array | None = None  # warm start (None -> zeros)
     # shard_map-only knobs (validated against MethodInfo.needs_mesh):
@@ -110,6 +114,11 @@ class ExperimentSpec:
             )
         if self.q is not None and self.q < 1:
             raise ValueError("q >= 1 required")
+        if self.lazy_updates not in (None, "exact", "proba"):
+            raise ValueError(
+                f"lazy_updates must be None, 'exact', or 'proba', got "
+                f"{self.lazy_updates!r}"
+            )
 
     def replace(self, **changes) -> "ExperimentSpec":
         """Derive a variant spec (sweeps: ``spec.replace(reg=...)``)."""

@@ -289,6 +289,274 @@ def _inner_epoch(
 
 
 # ---------------------------------------------------------------------------
+# Lazy (delayed-decay) inner epoch — O(u * nnz_l) per step
+# ---------------------------------------------------------------------------
+
+
+def _check_lazy(lazy_updates: str | None) -> None:
+    if lazy_updates not in (None, "exact", "proba"):
+        raise ValueError(
+            "lazy_updates must be None, 'exact', or 'proba', got "
+            f"{lazy_updates!r}"
+        )
+
+
+def _lazy_lams(reg: losses_lib.Regularizer) -> tuple[float, float, float]:
+    """Static (smooth_lam, prox_l1, prox_l2) for the lazy Pallas kernels
+    and the object-level simulation helpers (whose dense counterpart,
+    :func:`_sim_update`, also treats lam as static)."""
+    return (reg.smooth_lam, reg.prox_l1, reg.prox_l2)
+
+
+def _lazy_corrections(
+    block_data: BlockCSR, n: int, u: int, lazy_updates: str | None
+) -> jax.Array | None:
+    """Concatenated per-feature step corrections (probabilistic variant)."""
+    if lazy_updates != "proba":
+        return None
+    blocks = [
+        ops.step_corrections(block_data.nnz_col_block(l), n, u)
+        for l in range(block_data.num_blocks)
+    ]
+    return jnp.concatenate(blocks) if len(blocks) > 1 else blocks[0]
+
+
+# Same scan skeleton as _inner_epoch, but per inner step each block does
+# O(u * nnz_l) work instead of densifying all of w^(l):
+#   exact —  catch up the touched features (replay their deferred steps),
+#            read margins from the caught-up block, apply the dense update
+#            at the touched lanes only, and reconcile every feature at
+#            epoch end (lazy_flush) so the returned iterate is bit-equal
+#            to _inner_epoch's;
+#   proba —  touched features only, decay scaled by the per-feature
+#            corrections; w is always materialized, so no counters and no
+#            flush.
+# Both variants read only block-local state — the all-reduced margins are
+# byte-for-byte the eager schedule, so metering is unchanged by design.
+#
+# The smooth term is computed as ``smooth_lam * w`` with smooth_lam a
+# RUNTIME scalar (lam for l2, a runtime +0.0 otherwise), never the
+# compile-time ``zeros_like`` Regularizer.smooth_grad returns for the
+# non-l2 modes.  With a constant-zero smooth term the replayed step's
+# gradient is loop-invariant, XLA hoists the pre-rounded ``eta * g`` out
+# of the replay loop, and the trajectory loses the in-loop
+# ``w - eta*g`` FMA the dense scan's body gets from LLVM — a rare-input
+# 1-ulp drift (see the comment block in repro/kernels/ref.py).  A runtime
+# smooth_lam keeps g loop-varying; for the non-l2 modes ``smooth_lam * w``
+# is ±0.0 and ``(0.0 + z) + ±0.0`` is bitwise ``0.0 + z`` (the left side
+# is never -0.0), so the extra term is exact.  lam1/lam2 only enter
+# through loop-invariant scalars (eta*lam1, 1 + eta*lam2) whose hoisting
+# is value-preserving, so they may stay static on the kernel path.
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "loss_name", "reg_name", "block_dims", "use_kernels", "variant",
+        "lam2", "kernel_lams",
+    ),
+)
+def _lazy_inner_epoch(
+    block_indices,  # per-block int32[N, nnz_l], LOCAL ids
+    block_values,  # per-block float[N, nnz_l]
+    labels,
+    w0,
+    z_data,
+    s0,
+    samples,  # int32[M, u]
+    eta,
+    step_mask,  # float32[M]; must be a monotone prefix of ones (options I/II)
+    corrections,  # [d] step corrections, or None (exact variant)
+    loss_name: str,
+    reg_name: str,
+    lam,  # traced regularizer strength (as in _inner_epoch)
+    block_dims: tuple[int, ...],
+    use_kernels: bool,
+    variant: str,  # "exact" | "proba"
+    lam2: float = 0.0,
+    kernel_lams: tuple[float, float, float] | None = None,
+):
+    if use_kernels and kernel_lams is None:
+        raise ValueError(
+            "use_kernels=True requires kernel_lams=(smooth_lam, prox_l1, "
+            "prox_l2) — the lazy kernels bake them in at compile time"
+        )
+    loss = losses_lib.LOSSES[loss_name]
+    reg = losses_lib.Regularizer(reg_name, lam, lam2)
+    k_lam, k_l1, k_l2 = kernel_lams if kernel_lams else (0.0, 0.0, 0.0)
+    # Runtime smooth strength: lam itself for l2, else lam * 0.0 — a traced
+    # +0.0 XLA cannot fold away (see the comment above the decorator).
+    smooth_lam = lam if reg_name == "l2" else lam * 0.0
+    u = samples.shape[1]
+    m_total = samples.shape[0]
+    q = len(block_dims)
+    bounds = _bounds(block_dims)
+    exact = variant == "exact"
+    # Number of active (unmasked) steps: option_mask yields 1s then 0s, so
+    # the catch-up can decompose any gap as active replays + one masked one.
+    stop = jnp.sum(step_mask).astype(jnp.int32)
+
+    def split(vec):
+        return [
+            jax.lax.slice_in_dim(vec, bounds[l], bounds[l + 1])
+            for l in range(q)
+        ]
+
+    def jnp_replay(wl, zl, k_active, has_masked, eta_v):
+        # The untouched dense step — g is exactly the scatter's +0.0 base —
+        # replayed k_active times plus at most one masked (eta_m = 0) step.
+        # smooth_lam * cur (not reg.smooth_grad) keeps g loop-varying so
+        # XLA can't hoist eta * g out of the loop; the value is identical.
+        def one(cur, eta_i):
+            g = 0.0 + zl + smooth_lam * cur
+            return reg.prox(cur - eta_i * g, eta_i)
+
+        def body(i, cur):
+            return jnp.where(i < k_active, one(cur, eta_v), cur)
+
+        wl = jax.lax.fori_loop(0, jnp.max(k_active, initial=0), body, wl)
+        return jnp.where(has_masked, one(wl, eta_v * 0.0), wl)
+
+    def jnp_catchup(w_blk, last_blk, z_blk, idx, m):
+        flat = idx.reshape(-1)
+        ll = last_blk[flat]
+        k_active = jnp.maximum(jnp.minimum(stop, m) - ll, 0)
+        has_masked = (m - ll) > k_active
+        wl = jnp_replay(w_blk[flat], z_blk[flat], k_active, has_masked, eta)
+        return w_blk.at[flat].set(wl), last_blk.at[flat].set(m + 1)
+
+    def jnp_touch(w_blk, idx, val, coef, z_blk, eta_m):
+        # The argmax-based first-occurrence dedup is a scalar reduce
+        # XLA:CPU won't vectorize, but it is the only dedup that applies
+        # the duplicate contributions in the dense scatter-add's exact
+        # program order — the bit-identity contract pins it here.  The
+        # proba path below, which has no bit contract, uses the fast
+        # masked column-sum dedup instead.
+        flat = idx.reshape(-1)
+        contrib = (val * coef[..., None]).reshape(-1)
+        first = ops.ref._first_occurrence(flat)
+        g = jnp.zeros_like(contrib).at[first].add(contrib)
+        wl = w_blk[flat]
+        g = g + z_blk[flat] + smooth_lam * wl
+        v = reg.prox(wl - eta_m * g, eta_m)
+        return w_blk.at[flat].set(v[first])
+
+    def jnp_flush(w_blk, last_blk, z_blk):
+        total = jnp.asarray(m_total, dtype=jnp.int32)
+        k_active = jnp.maximum(jnp.minimum(stop, total) - last_blk, 0)
+        has_masked = (total - last_blk) > k_active
+        return jnp_replay(w_blk, z_blk, k_active, has_masked, eta)
+
+    def jnp_proba(w_blk, idx, val, coef, z_blk, corr_blk, eta_m):
+        # Masked column-sum dedup: each lane of a duplicated id receives
+        # the SAME summed contribution, so every duplicate computes an
+        # identical v and the scatter-set below is order-independent — no
+        # argmax, no first-occurrence scalar reduce.  The reduce may
+        # reassociate the sum; fine here, the proba variant's contract is
+        # unbiasedness, not bit order (the exact path keeps
+        # _first_occurrence).
+        flat = idx.reshape(-1)
+        contrib = (val * coef[..., None]).reshape(-1)
+        eq = flat[:, None] == flat[None, :]
+        g = jnp.sum(jnp.where(eq, contrib[:, None], 0.0), axis=0)
+        wl = w_blk[flat]
+        cl = corr_blk[flat]
+        v = wl - eta_m * (g + cl * (z_blk[flat] + smooth_lam * wl))
+        if reg_name in ("l1", "elastic_net"):
+            v = losses_lib.soft_threshold(v, eta_m * lam * cl)
+            if lam2:
+                v = v / (1.0 + eta_m * lam2 * cl)
+        return w_blk.at[flat].set(v)
+
+    z_blocks = split(z_data)
+    corr_blocks = None if exact else split(corrections)
+
+    def step(carry, inp):
+        if exact:
+            w, last = carry
+            last_blocks = split(last)
+        else:
+            w = carry
+        ids, mask, m = inp  # ids: int32[u]; m: int32 inner-step index
+        y = labels[ids]
+        rows = [(block_indices[l][ids], block_values[l][ids]) for l in range(q)]
+        w_blocks = split(w)
+        if exact:
+            for l in range(q):
+                if use_kernels:
+                    w_blocks[l], last_blocks[l] = ops.lazy_block_catchup(
+                        w_blocks[l], last_blocks[l], z_blocks[l], rows[l][0],
+                        eta, m, stop, lam=smooth_lam, lam1=k_l1, lam2=k_l2,
+                    )
+                else:
+                    w_blocks[l], last_blocks[l] = jnp_catchup(
+                        w_blocks[l], last_blocks[l], z_blocks[l], rows[l][0],
+                        m,
+                    )
+        # Margins gather only touched ids, which the catch-up just
+        # materialized — so coef is bit-identical to the eager epoch's.
+        parts = [
+            _block_margins(rows[l][0], rows[l][1], w_blocks[l], use_kernels)
+            for l in range(q)
+        ]
+        s_m = tree_order_sum(parts)
+        coef = (loss.dvalue(s_m, y) - loss.dvalue(s0[ids], y)) / u
+        eta_m = eta * mask
+        for l in range(q):
+            idx, val = rows[l]
+            if exact:
+                if use_kernels:
+                    w_blocks[l] = ops.lazy_block_touch_update(
+                        w_blocks[l], idx, val, coef, z_blocks[l], eta_m,
+                        lam=k_lam, lam1=k_l1, lam2=k_l2,
+                    )
+                else:
+                    w_blocks[l] = jnp_touch(
+                        w_blocks[l], idx, val, coef, z_blocks[l], eta_m
+                    )
+            elif use_kernels:
+                w_blocks[l] = ops.lazy_block_proba_update(
+                    w_blocks[l], idx, val, coef, z_blocks[l], corr_blocks[l],
+                    eta_m, lam=k_lam, lam1=k_l1, lam2=k_l2,
+                )
+            else:
+                w_blocks[l] = jnp_proba(
+                    w_blocks[l], idx, val, coef, z_blocks[l], corr_blocks[l],
+                    eta_m,
+                )
+        w_next = jnp.concatenate(w_blocks) if q > 1 else w_blocks[0]
+        if exact:
+            last_next = (
+                jnp.concatenate(last_blocks) if q > 1 else last_blocks[0]
+            )
+            return (w_next, last_next), None
+        return w_next, None
+
+    steps_idx = jnp.arange(m_total, dtype=jnp.int32)
+    if not exact:
+        w_final, _ = jax.lax.scan(
+            step, w0, (samples, step_mask, steps_idx)
+        )
+        return w_final
+    last0 = jnp.zeros(w0.shape, dtype=jnp.int32)
+    (w_final, last_final), _ = jax.lax.scan(
+        step, (w0, last0), (samples, step_mask, steps_idx)
+    )
+    # Epoch-end flush: snapshots, objectives, and meters downstream all see
+    # the fully-materialized iterate.
+    w_blocks = split(w_final)
+    last_blocks = split(last_final)
+    total = jnp.asarray(m_total, dtype=jnp.int32)
+    for l in range(q):
+        if use_kernels:
+            w_blocks[l] = ops.lazy_block_flush(
+                w_blocks[l], last_blocks[l], z_blocks[l], eta, total, stop,
+                lam=smooth_lam, lam1=k_l1, lam2=k_l2,
+            )
+        else:
+            w_blocks[l] = jnp_flush(w_blocks[l], last_blocks[l], z_blocks[l])
+    return jnp.concatenate(w_blocks) if q > 1 else w_blocks[0]
+
+
+# ---------------------------------------------------------------------------
 # Serial SVRG (Algorithm 2)
 # ---------------------------------------------------------------------------
 
@@ -301,11 +569,16 @@ def run_serial_svrg(
     *,
     use_kernels: bool = False,
     init_w: jax.Array | None = None,
+    lazy_updates: str | None = None,
 ) -> RunResult:
+    _check_lazy(lazy_updates)
     # The q=1 BlockCSR shares the PaddedCSR arrays (local ids == global).
     block_data = BlockCSR.from_padded(data, balanced(data.dim, 1))
     block_dims = block_data.block_dims
     kernel_lams = _kernel_lams(reg, use_kernels)
+    corrections = _lazy_corrections(
+        block_data, data.num_instances, cfg.batch_size, lazy_updates
+    )
 
     def snapshot(w):
         return _full_grad_blocks(
@@ -317,6 +590,15 @@ def run_serial_svrg(
         samples = draw_samples(rng, data.num_instances, cfg.inner_steps,
                                cfg.batch_size)
         mask = option_mask(rng, cfg.inner_steps, cfg.option)
+        if lazy_updates is not None:
+            return _lazy_inner_epoch(
+                block_data.indices, block_data.values, data.labels,
+                w, z_data, s0,
+                jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
+                corrections, loss.name, reg.name, reg.lam, block_dims,
+                use_kernels, lazy_updates, lam2=reg.lam2,
+                kernel_lams=kernel_lams,
+            )
         return _inner_epoch(
             block_data.indices, block_data.values, data.labels,
             w, z_data, s0,
@@ -352,6 +634,7 @@ def run_fdsvrg(
     use_kernels: bool = False,
     block_data: BlockCSR | None = None,
     init_w: jax.Array | None = None,
+    lazy_updates: str | None = None,
 ) -> RunResult:
     """Algorithm 1 with q = partition.num_blocks feature-sharded workers.
 
@@ -366,7 +649,12 @@ def run_fdsvrg(
 
       outer t:  tree reduce+broadcast of the N-vector  w_t^T D  -> 2qN scalars
       inner m:  tree reduce+broadcast of u margins      -> 2qu scalars
+
+    ``lazy_updates`` ("exact" | "proba") swaps the inner epoch for the
+    delayed-decay O(u * nnz_l) path (:func:`_lazy_inner_epoch`); it is
+    block-local, so the metered schedule above is unchanged bit-for-bit.
     """
+    _check_lazy(lazy_updates)
     q = partition.num_blocks
     if backend is None:
         backend = SimBackend(q, cluster)
@@ -382,6 +670,7 @@ def run_fdsvrg(
     block_dims = block_data.block_dims
     kernel_lams = _kernel_lams(reg, use_kernels)
     n, u, nnz = data.num_instances, cfg.batch_size, data.nnz_max
+    corrections = _lazy_corrections(block_data, n, u, lazy_updates)
 
     def snapshot(w):
         return _full_grad_blocks(
@@ -397,13 +686,23 @@ def run_fdsvrg(
 
         samples = draw_samples(rng, n, cfg.inner_steps, u)
         mask = option_mask(rng, cfg.inner_steps, cfg.option)
-        w = _inner_epoch(
-            block_data.indices, block_data.values, data.labels,
-            w, z_data, s0,
-            jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
-            loss.name, reg.name, reg.lam, block_dims, use_kernels,
-            lam2=reg.lam2, kernel_lams=kernel_lams,
-        )
+        if lazy_updates is not None:
+            w = _lazy_inner_epoch(
+                block_data.indices, block_data.values, data.labels,
+                w, z_data, s0,
+                jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
+                corrections, loss.name, reg.name, reg.lam, block_dims,
+                use_kernels, lazy_updates, lam2=reg.lam2,
+                kernel_lams=kernel_lams,
+            )
+        else:
+            w = _inner_epoch(
+                block_data.indices, block_data.values, data.labels,
+                w, z_data, s0,
+                jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
+                loss.name, reg.name, reg.lam, block_dims, use_kernels,
+                lam2=reg.lam2, kernel_lams=kernel_lams,
+            )
         # --- inner-loop communication (Alg 1 lines 9-11): one tree round
         # per mini-batch of u margins; M steps total (metered in aggregate).
         backend.meter_tree(payload=u, steps=cfg.inner_steps)
@@ -457,6 +756,57 @@ def _sim_update(w_block, idx, val, coef, z_block, eta_m, reg_name, lam,
     return reg.prox(w_block - eta_m * g, eta_m)
 
 
+# Lazy per-step worker operations (object-level simulation).  ``m``/``stop``
+# /``total`` arrive as traced int32 scalars so all M inner steps share one
+# compilation.  The replaying pair (catchup/flush) takes the smooth
+# strength ``lam`` as a traced operand — baked in, XLA hoists the replay
+# loop's pre-rounded ``eta * g`` and the trajectory drifts an ulp from the
+# eager per-step oracle (see repro/kernels/ref.py); the single-application
+# helpers keep the full static triple like :func:`_sim_update`.
+@functools.partial(jax.jit, static_argnames=("prox_lams", "use_kernels"))
+def _sim_lazy_catchup(w_block, last_block, z_block, idx, eta, m, stop, lam,
+                      prox_lams, use_kernels):
+    lam1, lam2 = prox_lams
+    fn = ops.lazy_block_catchup if use_kernels else ops.ref.lazy_catchup_ref
+    return fn(w_block, last_block, z_block, idx, eta, m, stop,
+              lam=lam, lam1=lam1, lam2=lam2)
+
+
+@functools.partial(jax.jit, static_argnames=("lams", "use_kernels"))
+def _sim_lazy_touch(w_block, idx, val, coef, z_block, eta_m, lams,
+                    use_kernels):
+    lam, lam1, lam2 = lams
+    fn = (
+        ops.lazy_block_touch_update
+        if use_kernels
+        else ops.ref.lazy_touch_update_ref
+    )
+    return fn(w_block, idx, val, coef, z_block, eta_m,
+              lam=lam, lam1=lam1, lam2=lam2)
+
+
+@functools.partial(jax.jit, static_argnames=("prox_lams", "use_kernels"))
+def _sim_lazy_flush(w_block, last_block, z_block, eta, total, stop, lam,
+                    prox_lams, use_kernels):
+    lam1, lam2 = prox_lams
+    fn = ops.lazy_block_flush if use_kernels else ops.ref.lazy_flush_ref
+    return fn(w_block, last_block, z_block, eta, total, stop,
+              lam=lam, lam1=lam1, lam2=lam2)
+
+
+@functools.partial(jax.jit, static_argnames=("lams", "use_kernels"))
+def _sim_lazy_proba(w_block, idx, val, coef, z_block, corr_block, eta_m,
+                    lams, use_kernels):
+    lam, lam1, lam2 = lams
+    fn = (
+        ops.lazy_block_proba_update
+        if use_kernels
+        else ops.ref.lazy_proba_update_ref
+    )
+    return fn(w_block, idx, val, coef, z_block, corr_block, eta_m,
+              lam=lam, lam1=lam1, lam2=lam2)
+
+
 def fdsvrg_worker_simulation(
     data: PaddedCSR,
     partition: FeaturePartition,
@@ -468,6 +818,7 @@ def fdsvrg_worker_simulation(
     use_kernels: bool = False,
     block_data: BlockCSR | None = None,
     init_w: jax.Array | None = None,
+    lazy_updates: str | None = None,
 ) -> RunResult:
     """Object-level Algorithm 1: a list of per-worker states; every
     inner-loop cross-worker scalar passes through ``backend.all_reduce``
@@ -481,7 +832,13 @@ def fdsvrg_worker_simulation(
     schema as every driver; the meter is the backend's).  Deliberately
     step-by-step and slow — this is the executable spec, and the vehicle
     for the backend-equivalence tests.
+
+    ``lazy_updates`` ("exact" | "proba") runs the worker-local delayed-decay
+    flow: catch up the touched features before the margin read (exact),
+    update only the touched lanes, and flush each worker's block at epoch
+    end — the all-reduce schedule is untouched.
     """
+    _check_lazy(lazy_updates)
     q = partition.num_blocks
     backend = backend or SimBackend(q)
     if block_data is None:
@@ -513,6 +870,21 @@ def fdsvrg_worker_simulation(
         z_data = jnp.concatenate(z_blocks) if q > 1 else z_blocks[0]
         return z_data, s0
 
+    lams = _lazy_lams(reg)
+    smooth_lam = jnp.asarray(reg.smooth_lam, dtype=jnp.float32)
+    prox_lams = (reg.prox_l1, reg.prox_l2)
+    exact = lazy_updates == "exact"
+    corr_blocks = (
+        [
+            ops.step_corrections(
+                block_data.nnz_col_block(l), n, cfg.batch_size
+            )
+            for l in range(q)
+        ]
+        if lazy_updates == "proba"
+        else None
+    )
+
     def epoch(t, rng, w, z_data, s0):
         # Account the full-gradient tree this outer consumed (lines 3-4).
         backend.meter_tree(payload=n)
@@ -520,6 +892,11 @@ def fdsvrg_worker_simulation(
         z_blocks = split(z_data)
         samples = draw_samples(rng, n, cfg.inner_steps, cfg.batch_size)
         mask = option_mask(rng, cfg.inner_steps, cfg.option)
+        eta_full = jnp.asarray(cfg.eta, dtype=blocks[0].dtype)
+        stop = jnp.asarray(int(jnp.asarray(mask).sum()), dtype=jnp.int32)
+        lasts = [
+            jnp.zeros((block_dims[l],), dtype=jnp.int32) for l in range(q)
+        ]
 
         for m in range(cfg.inner_steps):
             ids = samples[m]
@@ -528,6 +905,15 @@ def fdsvrg_worker_simulation(
                 for l in range(q)
             ]
             y = data.labels[ids]
+            if exact:
+                # Replay each touched feature's deferred steps so the
+                # margin read below sees the materialized values.
+                for l in range(q):
+                    blocks[l], lasts[l] = _sim_lazy_catchup(
+                        blocks[l], lasts[l], z_blocks[l], rows[l][0],
+                        eta_full, jnp.asarray(m, dtype=jnp.int32), stop,
+                        smooth_lam, prox_lams, use_kernels,
+                    )
             # Lines 9-10: per-worker partial margins, tree-summed (u scalars).
             partial_m = [
                 _sim_margins(rows[l][0], rows[l][1], blocks[l], use_kernels)
@@ -540,9 +926,28 @@ def fdsvrg_worker_simulation(
             # Line 11: purely local prox update on each block (the prox is
             # elementwise — paper eq. 3 — so no worker needs its peers).
             for l in range(q):
-                blocks[l] = _sim_update(
-                    blocks[l], rows[l][0], rows[l][1], coef, z_blocks[l],
-                    eta_m, reg.name, reg.lam, use_kernels, lam2=reg.lam2,
+                if lazy_updates is None:
+                    blocks[l] = _sim_update(
+                        blocks[l], rows[l][0], rows[l][1], coef, z_blocks[l],
+                        eta_m, reg.name, reg.lam, use_kernels, lam2=reg.lam2,
+                    )
+                elif exact:
+                    blocks[l] = _sim_lazy_touch(
+                        blocks[l], rows[l][0], rows[l][1], coef, z_blocks[l],
+                        eta_m, lams, use_kernels,
+                    )
+                else:
+                    blocks[l] = _sim_lazy_proba(
+                        blocks[l], rows[l][0], rows[l][1], coef, z_blocks[l],
+                        corr_blocks[l], eta_m, lams, use_kernels,
+                    )
+        if exact:
+            # Epoch-end reconciliation, worker-locally (zero communication).
+            total = jnp.asarray(cfg.inner_steps, dtype=jnp.int32)
+            for l in range(q):
+                blocks[l] = _sim_lazy_flush(
+                    blocks[l], lasts[l], z_blocks[l], eta_full, total, stop,
+                    smooth_lam, prox_lams, use_kernels,
                 )
         return jnp.concatenate(blocks) if q > 1 else blocks[0]
 

@@ -52,6 +52,14 @@ class BlockCSR:
     values: tuple[jax.Array, ...]  # per block: float[N, nnz_l]
     labels: jax.Array  # float[N], in {-1, +1}
     dim: int  # global d
+    # Per-block column-nnz statistics: int32[dim_l] counting, for each
+    # LOCAL feature id, the number of instances whose rows store it with a
+    # nonzero value (explicit zeros were dropped by from_padded, so these
+    # are structural-nonzero counts of the layout as stored).  They feed
+    # the probabilistic lazy-update step corrections N/nnz_col(j) — see
+    # repro.kernels.lazy_update.  None means "not computed" (direct
+    # constructions); use nnz_col_block() which computes on demand.
+    nnz_col: tuple[jax.Array, ...] | None = None
 
     @property
     def num_blocks(self) -> int:
@@ -71,6 +79,26 @@ class BlockCSR:
 
     def block(self, l: int) -> tuple[jax.Array, jax.Array]:
         return self.indices[l], self.values[l]
+
+    def nnz_col_block(self, l: int) -> jax.Array:
+        """int32[dim_l] per-feature instance counts for block ``l``.
+
+        Counts rows storing a *nonzero* value at each local id, so padding
+        and explicit zeros (which the scatter/gather paths cannot
+        distinguish — see the explicit-zero invariant on
+        :meth:`from_padded`) contribute nothing.  Precomputed by
+        :meth:`from_padded`; computed on demand for directly-constructed
+        instances (host-side numpy, cheap relative to re-indexing).
+        """
+        if self.nnz_col is not None:
+            return self.nnz_col[l]
+        return jnp.asarray(
+            _count_cols(
+                np.asarray(self.indices[l]),
+                np.asarray(self.values[l]),
+                int(self.block_dims[l]),
+            )
+        )
 
     @classmethod
     def from_padded(
@@ -114,12 +142,22 @@ class BlockCSR:
                 values=(data.values,),
                 labels=data.labels,
                 dim=data.dim,
+                nnz_col=(
+                    jnp.asarray(
+                        _count_cols(
+                            np.asarray(data.indices),
+                            np.asarray(data.values),
+                            data.dim,
+                        )
+                    ),
+                ),
             )
         idx = np.asarray(data.indices)
         val = np.asarray(data.values)
         n = idx.shape[0]
         block_indices: list[jax.Array] = []
         block_values: list[jax.Array] = []
+        block_nnz_col: list[jax.Array] = []
         for l in range(partition.num_blocks):
             lo, hi = partition.block(l)
             in_blk = (idx >= lo) & (idx < hi) & (val != 0.0)
@@ -135,12 +173,16 @@ class BlockCSR:
             out_val[rows, pos] = val[rows, cols]
             block_indices.append(jnp.asarray(out_idx))
             block_values.append(jnp.asarray(out_val))
+            block_nnz_col.append(
+                jnp.asarray(_count_cols(out_idx, out_val, hi - lo))
+            )
         return cls(
             partition=partition,
             indices=tuple(block_indices),
             values=tuple(block_values),
             labels=data.labels,
             dim=data.dim,
+            nnz_col=tuple(block_nnz_col),
         )
 
     def stacked(self, budget: int | None = None) -> tuple[jax.Array, jax.Array]:
@@ -172,6 +214,14 @@ class BlockCSR:
 
     def nnz_total(self) -> int:
         return int(sum(jnp.sum(v != 0.0) for v in self.values))
+
+
+def _count_cols(indices: np.ndarray, values: np.ndarray, dim: int) -> np.ndarray:
+    """int32[dim] count of rows storing a nonzero value per local id."""
+    mask = values != 0.0
+    return np.bincount(
+        indices[mask].reshape(-1), minlength=dim
+    ).astype(np.int32)
 
 
 def aot_nnz_budget(nnz_max: int, q: int) -> int:

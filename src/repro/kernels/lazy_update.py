@@ -1,0 +1,281 @@
+"""Pallas TPU kernels: lazy (delayed-decay) FD-SVRG inner steps.
+
+The dense inner step (:mod:`repro.kernels.prox_update`) densifies the full
+per-worker block every sample — O(d_block) work per inner step even when a
+news20 row touches ~0.02% of features.  This family defers the regularizer
+/ z-drift decay of untouched features and restores O(u * nnz_l) inner-step
+work, in two flavors:
+
+* **exact** — three kernels cooperating with a per-feature ``last`` counter
+  (number of inner steps already applied):
+
+    - ``lazy_catchup``: before the margins of step m are read, replay each
+      *touched* feature's deferred steps ``last[j] .. m-1`` (g = +0.0 for
+      an untouched feature, so each replayed step is the dense step with a
+      zero data gradient) and stamp ``last[j] = m+1``;
+    - ``lazy_touch_update``: the dense prox update evaluated only at the
+      touched lanes (first-occurrence scatter keeps the dense per-feature
+      accumulation order);
+    - ``lazy_flush``: epoch-end reconciliation replaying every feature's
+      remaining deferred steps, so snapshots / objectives / meters are
+      computed on the fully-materialized iterate.
+
+  Replay — not closed forms — because the contract is BIT-identity to the
+  iterated dense oracle: ``(1 - eta*lam)**k * w`` rounds differently from
+  k explicit steps.  The Option II mask is a monotone prefix of ones, so a
+  gap decomposes as ``k_active`` active replays plus at most one masked
+  (eta_m = +0.0) replay, which is idempotent.
+
+* **probabilistic** — one kernel, ``lazy_proba_update``: only touched
+  features move, with the deterministic decay scaled by the per-feature
+  correction ``corr[j] = 1 / P(j touched per step)`` (``step_corrections``
+  below, fed by ``BlockCSR.nnz_col``) so the expected per-step update
+  matches the dense oracle's deterministic part.  No counter, no flush.
+
+Both variants are block-local — they read only ``w^(l)``/``z^(l)`` and the
+block's own rows, so they add **zero communication** to Algorithm 1.
+
+``lam1``/``lam2`` are compile-time constants (as in prox_update);
+``eta``/``m``/``stop`` arrive as runtime (1, 1) scalars.  The smooth
+strength ``lam`` is ALSO a runtime (1, 1) scalar in the two replaying
+kernels (``lazy_catchup``/``lazy_flush``) — baking it in would let XLA
+hoist the loop-invariant ``eta * g`` out of the replay loop, pre-rounding
+the product the dense scan computes as an in-loop FMA (see the comment in
+:mod:`repro.kernels.ref`); the single-application kernels keep it static
+like the dense fused kernels.  The kernel bodies execute the reference
+expression functions from :mod:`repro.kernels.ref` verbatim — that
+sharing *is* the numerics contract, and ``interpret=True`` (CPU) asserts
+it bit-for-bit in the tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+
+def step_corrections(
+    nnz_col: jax.Array,  # int32[d_block] rows storing a nonzero per feature
+    n: int,  # total instances
+    u: int = 1,  # mini-batch size
+    dtype=jnp.float32,
+) -> jax.Array:  # [d_block]
+    """Per-feature probabilistic step corrections 1 / P(touched per step).
+
+    A feature stored by ``nnz_col[j]`` of the n rows is touched by a
+    uniform u-row mini-batch with probability ``p = 1 - (1 - nnz_col/n)^u``
+    (``= nnz_col/n`` for u = 1, the classic ``N/nnz_col(j)`` correction).
+    Features stored by no row (nnz_col = 0) are never touched, so their
+    correction is irrelevant; it is pinned to 1.0 to keep the vector
+    finite."""
+    p1 = nnz_col.astype(dtype) / dtype(n)
+    p = 1.0 - (1.0 - p1) ** u
+    safe = jnp.where(nnz_col > 0, p, dtype(1.0))
+    return (1.0 / safe).astype(dtype)
+
+
+def _catchup_kernel(lam1, lam2, w_ref, last_ref, z_ref, idx_ref,
+                    lam_ref, eta_ref, m_ref, stop_ref, w_out, last_out):
+    w = w_ref[0, :]
+    last = last_ref[0, :]
+    flat = idx_ref[...].reshape(-1)
+    lam = lam_ref[0, 0]
+    eta = eta_ref[0, 0]
+    m = m_ref[0, 0]
+    stop = stop_ref[0, 0]
+    ll = last[flat]
+    k_active = jnp.maximum(jnp.minimum(stop, m) - ll, 0)
+    has_masked = (m - ll) > k_active
+    wl = ref.lazy_replay_ref(
+        w[flat], z_ref[0, :][flat], eta, k_active, has_masked,
+        lam=lam, lam1=lam1, lam2=lam2,
+    )
+    w_out[0, :] = w.at[flat].set(wl)
+    last_out[0, :] = last.at[flat].set(m + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("lam1", "lam2", "interpret"))
+def lazy_catchup(
+    w: jax.Array,  # [1, d_block]
+    last: jax.Array,  # int32[1, d_block]
+    z: jax.Array,  # [1, d_block]
+    indices: jax.Array,  # int32[u, nnz_l], local ids
+    lam: jax.Array,  # [1, 1] smooth strength (runtime: see module docstring)
+    eta: jax.Array,  # [1, 1] UNMASKED step size
+    m: jax.Array,  # int32[1, 1] current inner-step index
+    stop: jax.Array,  # int32[1, 1] number of active steps this epoch
+    *,
+    lam1: float,
+    lam2: float,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    one, d_block = w.shape
+    assert one == 1 and z.shape == w.shape and last.shape == w.shape
+    u, nnz = indices.shape
+    assert lam.shape == (1, 1) and eta.shape == (1, 1)
+    assert m.shape == (1, 1) and stop.shape == (1, 1)
+
+    spec_vec = pl.BlockSpec((1, d_block), lambda: (0, 0))
+    spec_scalar = pl.BlockSpec((1, 1), lambda: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_catchup_kernel, lam1, lam2),
+        grid=(),
+        in_specs=[
+            spec_vec,
+            spec_vec,
+            spec_vec,
+            pl.BlockSpec((u, nnz), lambda: (0, 0)),
+            spec_scalar,
+            spec_scalar,
+            spec_scalar,
+            spec_scalar,
+        ],
+        out_specs=[spec_vec, spec_vec],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d_block), jnp.float32),
+            jax.ShapeDtypeStruct((1, d_block), jnp.int32),
+        ],
+        interpret=interpret,
+    )(w, last, z, indices, lam, eta, m, stop)
+
+
+def _touch_update_kernel(lam, lam1, lam2, w_ref, idx_ref, val_ref, coef_ref,
+                         z_ref, eta_ref, out_ref):
+    out_ref[0, :] = ref.lazy_touch_update_ref(
+        w_ref[0, :], idx_ref[...], val_ref[...], coef_ref[0, :], z_ref[0, :],
+        eta_ref[0, 0], lam=lam, lam1=lam1, lam2=lam2,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "lam1", "lam2", "interpret"))
+def lazy_touch_update(
+    w: jax.Array,  # [1, d_block], caught up at the touched ids
+    indices: jax.Array,  # int32[u, nnz_l]
+    values: jax.Array,  # [u, nnz_l]
+    coef: jax.Array,  # [1, u]
+    z: jax.Array,  # [1, d_block]
+    eta: jax.Array,  # [1, 1] masked step size (eta * option mask)
+    *,
+    lam: float,
+    lam1: float,
+    lam2: float,
+    interpret: bool = False,
+) -> jax.Array:  # [1, d_block] float32
+    one, d_block = w.shape
+    assert one == 1 and z.shape == w.shape
+    u, nnz = indices.shape
+    assert values.shape == (u, nnz) and coef.shape == (1, u)
+    assert eta.shape == (1, 1)
+
+    spec_vec = pl.BlockSpec((1, d_block), lambda: (0, 0))
+    spec_rows = pl.BlockSpec((u, nnz), lambda: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_touch_update_kernel, lam, lam1, lam2),
+        grid=(),
+        in_specs=[
+            spec_vec,
+            spec_rows,
+            spec_rows,
+            pl.BlockSpec((1, u), lambda: (0, 0)),
+            spec_vec,
+            pl.BlockSpec((1, 1), lambda: (0, 0)),
+        ],
+        out_specs=spec_vec,
+        out_shape=jax.ShapeDtypeStruct((1, d_block), jnp.float32),
+        interpret=interpret,
+    )(w, indices, values, coef, z, eta)
+
+
+def _flush_kernel(lam1, lam2, w_ref, last_ref, z_ref, lam_ref, eta_ref,
+                  total_ref, stop_ref, out_ref):
+    out_ref[0, :] = ref.lazy_flush_ref(
+        w_ref[0, :], last_ref[0, :], z_ref[0, :], eta_ref[0, 0],
+        total_ref[0, 0], stop_ref[0, 0], lam=lam_ref[0, 0], lam1=lam1,
+        lam2=lam2,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("lam1", "lam2", "interpret"))
+def lazy_flush(
+    w: jax.Array,  # [1, d_block]
+    last: jax.Array,  # int32[1, d_block]
+    z: jax.Array,  # [1, d_block]
+    lam: jax.Array,  # [1, 1] smooth strength (runtime: see module docstring)
+    eta: jax.Array,  # [1, 1] UNMASKED step size
+    total: jax.Array,  # int32[1, 1] total inner steps M
+    stop: jax.Array,  # int32[1, 1] number of active steps
+    *,
+    lam1: float,
+    lam2: float,
+    interpret: bool = False,
+) -> jax.Array:  # [1, d_block] float32
+    one, d_block = w.shape
+    assert one == 1 and z.shape == w.shape and last.shape == w.shape
+    assert lam.shape == (1, 1) and eta.shape == (1, 1)
+    assert total.shape == (1, 1) and stop.shape == (1, 1)
+
+    spec_vec = pl.BlockSpec((1, d_block), lambda: (0, 0))
+    spec_scalar = pl.BlockSpec((1, 1), lambda: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_flush_kernel, lam1, lam2),
+        grid=(),
+        in_specs=[spec_vec, spec_vec, spec_vec, spec_scalar, spec_scalar,
+                  spec_scalar, spec_scalar],
+        out_specs=spec_vec,
+        out_shape=jax.ShapeDtypeStruct((1, d_block), jnp.float32),
+        interpret=interpret,
+    )(w, last, z, lam, eta, total, stop)
+
+
+def _proba_update_kernel(lam, lam1, lam2, w_ref, idx_ref, val_ref, coef_ref,
+                         z_ref, corr_ref, eta_ref, out_ref):
+    out_ref[0, :] = ref.lazy_proba_update_ref(
+        w_ref[0, :], idx_ref[...], val_ref[...], coef_ref[0, :], z_ref[0, :],
+        corr_ref[0, :], eta_ref[0, 0], lam=lam, lam1=lam1, lam2=lam2,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "lam1", "lam2", "interpret"))
+def lazy_proba_update(
+    w: jax.Array,  # [1, d_block]
+    indices: jax.Array,  # int32[u, nnz_l]
+    values: jax.Array,  # [u, nnz_l]
+    coef: jax.Array,  # [1, u]
+    z: jax.Array,  # [1, d_block]
+    corr: jax.Array,  # [1, d_block] step corrections (step_corrections)
+    eta: jax.Array,  # [1, 1] masked step size (eta * option mask)
+    *,
+    lam: float,
+    lam1: float,
+    lam2: float,
+    interpret: bool = False,
+) -> jax.Array:  # [1, d_block] float32
+    one, d_block = w.shape
+    assert one == 1 and z.shape == w.shape and corr.shape == w.shape
+    u, nnz = indices.shape
+    assert values.shape == (u, nnz) and coef.shape == (1, u)
+    assert eta.shape == (1, 1)
+
+    spec_vec = pl.BlockSpec((1, d_block), lambda: (0, 0))
+    spec_rows = pl.BlockSpec((u, nnz), lambda: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_proba_update_kernel, lam, lam1, lam2),
+        grid=(),
+        in_specs=[
+            spec_vec,
+            spec_rows,
+            spec_rows,
+            pl.BlockSpec((1, u), lambda: (0, 0)),
+            spec_vec,
+            spec_vec,
+            pl.BlockSpec((1, 1), lambda: (0, 0)),
+        ],
+        out_specs=spec_vec,
+        out_shape=jax.ShapeDtypeStruct((1, d_block), jnp.float32),
+        interpret=interpret,
+    )(w, indices, values, coef, z, corr, eta)

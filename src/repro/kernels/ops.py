@@ -17,6 +17,13 @@ from repro.kernels import ref
 from repro.kernels.fd_matvec import fd_matvec
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.fused_update import fused_update
+from repro.kernels.lazy_update import (
+    lazy_catchup,
+    lazy_flush,
+    lazy_proba_update,
+    lazy_touch_update,
+    step_corrections,
+)
 from repro.kernels.logistic_grad import logistic_grad
 from repro.kernels.prox_update import prox_update
 from repro.kernels.sparse_margin import sparse_margin
@@ -124,6 +131,143 @@ def fused_block_prox_update(
     return out[0, :d]
 
 
+def _i32_scalar(x) -> jax.Array:
+    return jnp.asarray(x, dtype=jnp.int32)[None, None]
+
+
+def lazy_block_catchup(
+    w_block: jax.Array,  # [d_block]
+    last_block: jax.Array,  # int32[d_block]
+    z_block: jax.Array,  # [d_block]
+    indices: jax.Array,  # int32[u, nnz_l], block-LOCAL ids
+    eta: jax.Array | float,  # UNMASKED step size
+    m: jax.Array | int,  # current inner-step index
+    stop: jax.Array | int,  # number of active (unmasked) steps this epoch
+    *,
+    lam: jax.Array | float,  # smooth strength — RUNTIME operand (see kernel)
+    lam1: float = 0.0,
+    lam2: float = 0.0,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:  # ([d_block], int32[d_block])
+    """Exact-lazy catch-up: replay the deferred decay of every feature
+    touched at inner step ``m`` (see :mod:`repro.kernels.lazy_update`),
+    returning the caught-up block and the updated ``last`` counters."""
+    interpret = _interpret_default() if interpret is None else interpret
+    d = w_block.shape[0]
+    w_out, last_out = lazy_catchup(
+        w_block[None, :],
+        last_block[None, :],
+        z_block[None, :],
+        indices,
+        jnp.asarray(lam, dtype=w_block.dtype)[None, None],
+        jnp.asarray(eta, dtype=w_block.dtype)[None, None],
+        _i32_scalar(m),
+        _i32_scalar(stop),
+        lam1=lam1,
+        lam2=lam2,
+        interpret=interpret,
+    )
+    return w_out[0, :d], last_out[0, :d]
+
+
+def lazy_block_touch_update(
+    w_block: jax.Array,  # [d_block], caught up at the touched ids
+    indices: jax.Array,  # int32[u, nnz_l], block-LOCAL ids
+    values: jax.Array,  # [u, nnz_l]
+    coef: jax.Array,  # [u]
+    z_block: jax.Array,  # [d_block]
+    eta: jax.Array | float,  # masked step size (eta * option mask)
+    *,
+    lam: float,
+    lam1: float = 0.0,
+    lam2: float = 0.0,
+    interpret: bool | None = None,
+) -> jax.Array:  # [d_block]
+    """Exact-lazy eager half-step: the dense prox update evaluated only at
+    the touched lanes — O(u * nnz_l) instead of O(d_block)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    d = w_block.shape[0]
+    out = lazy_touch_update(
+        w_block[None, :],
+        indices,
+        values,
+        coef[None, :],
+        z_block[None, :],
+        jnp.asarray(eta, dtype=w_block.dtype)[None, None],
+        lam=lam,
+        lam1=lam1,
+        lam2=lam2,
+        interpret=interpret,
+    )
+    return out[0, :d]
+
+
+def lazy_block_flush(
+    w_block: jax.Array,  # [d_block]
+    last_block: jax.Array,  # int32[d_block]
+    z_block: jax.Array,  # [d_block]
+    eta: jax.Array | float,  # UNMASKED step size
+    total: jax.Array | int,  # total inner steps M this epoch
+    stop: jax.Array | int,  # number of active steps
+    *,
+    lam: jax.Array | float,  # smooth strength — RUNTIME operand (see kernel)
+    lam1: float = 0.0,
+    lam2: float = 0.0,
+    interpret: bool | None = None,
+) -> jax.Array:  # [d_block]
+    """Epoch-end reconciliation: replay every feature's deferred steps so
+    the block equals the dense iterate after all M inner steps."""
+    interpret = _interpret_default() if interpret is None else interpret
+    d = w_block.shape[0]
+    out = lazy_flush(
+        w_block[None, :],
+        last_block[None, :],
+        z_block[None, :],
+        jnp.asarray(lam, dtype=w_block.dtype)[None, None],
+        jnp.asarray(eta, dtype=w_block.dtype)[None, None],
+        _i32_scalar(total),
+        _i32_scalar(stop),
+        lam1=lam1,
+        lam2=lam2,
+        interpret=interpret,
+    )
+    return out[0, :d]
+
+
+def lazy_block_proba_update(
+    w_block: jax.Array,  # [d_block]
+    indices: jax.Array,  # int32[u, nnz_l], block-LOCAL ids
+    values: jax.Array,  # [u, nnz_l]
+    coef: jax.Array,  # [u]
+    z_block: jax.Array,  # [d_block]
+    corr_block: jax.Array,  # [d_block] step corrections (step_corrections)
+    eta: jax.Array | float,  # masked step size (eta * option mask)
+    *,
+    lam: float,
+    lam1: float = 0.0,
+    lam2: float = 0.0,
+    interpret: bool | None = None,
+) -> jax.Array:  # [d_block]
+    """Probabilistic lazy step: touched features only, decay scaled by the
+    per-feature corrections so the expected update is unbiased."""
+    interpret = _interpret_default() if interpret is None else interpret
+    d = w_block.shape[0]
+    out = lazy_proba_update(
+        w_block[None, :],
+        indices,
+        values,
+        coef[None, :],
+        z_block[None, :],
+        corr_block[None, :],
+        jnp.asarray(eta, dtype=w_block.dtype)[None, None],
+        lam=lam,
+        lam1=lam1,
+        lam2=lam2,
+        interpret=interpret,
+    )
+    return out[0, :d]
+
+
 def margins_dense(
     w: jax.Array,  # [d]
     data: jax.Array,  # [d, N]
@@ -212,6 +356,11 @@ __all__ = [
     "sparse_margins",
     "fused_block_update",
     "fused_block_prox_update",
+    "lazy_block_catchup",
+    "lazy_block_touch_update",
+    "lazy_block_flush",
+    "lazy_block_proba_update",
+    "step_corrections",
     "margins_dense",
     "loss_and_grad",
     "svrg_dense_update",

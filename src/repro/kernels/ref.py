@@ -86,6 +86,192 @@ def prox_update_ref(
     return v
 
 
+# ---------------------------------------------------------------------------
+# Lazy (delayed-decay) inner steps — see repro.kernels.lazy_update
+# ---------------------------------------------------------------------------
+#
+# The exact variant must be BIT-identical to iterating the dense oracle
+# (:func:`prox_update_ref` step after step), so the catch-up below *replays*
+# the per-step expression tree instead of using closed forms (a geometric
+# decay ``(1 - eta*lam)**k * w`` rounds differently from k explicit steps).
+# For a feature untouched at step i the dense scatter contributes exactly
+# the +0.0 base, so the replayed step is the dense step with g = 0.0.
+#
+# Masked steps (Option II tail, eta_m = +0.0) are idempotent after one
+# application — the only state they can change is flipping a -0.0 weight to
+# +0.0 (w - (-0.0) = +0.0 under round-to-nearest) and normalizing through
+# the prox, and a second application is then the identity.  The option mask
+# is monotone (a prefix of ones), so a gap of untouched steps decomposes as
+# ``k_active`` active replays followed by at most one masked replay.
+#
+# ``lam`` must reach the replay loop as a RUNTIME scalar, never a baked
+# constant.  With a constant 0.0 (the l1 / elastic-net / unregularized
+# cases) XLA folds ``lam * w`` away, sees ``eta * g`` as loop-invariant,
+# and hoists the pre-rounded product out of the loop — two roundings per
+# step.  The dense scan's body keeps the multiply inside the loop (its g
+# changes every step) and LLVM contracts ``w - eta*g`` into a single-
+# rounding FMA, so the hoisted replay drifts by an ulp on rare inputs.  A
+# runtime ``lam`` keeps ``g`` loop-varying and the contraction identical.
+
+
+def _lazy_step_ref(
+    w: jax.Array, z: jax.Array, eta, *, lam, lam1: float, lam2: float
+) -> jax.Array:
+    """One dense inner step restricted to untouched features (g = +0.0),
+    in exactly the dense oracle's association order."""
+    g = 0.0 + z  # scatter base + z; never -0.0, so `+ lam*w` below is
+    g = g + lam * w  # bitwise `+ zeros_like(w)` when lam == 0.0
+    v = w - eta * g
+    if lam1 != 0.0 or lam2 != 0.0:
+        v = jnp.sign(v) * jnp.maximum(jnp.abs(v) - eta * lam1, 0.0)
+        if lam2 != 0.0:
+            v = v / (1.0 + eta * lam2)
+    return v
+
+
+def lazy_replay_ref(
+    w: jax.Array,  # [L] gathered (or whole-block) weights
+    z: jax.Array,  # [L] matching z entries
+    eta: jax.Array | float,  # UNMASKED step size
+    k_active: jax.Array,  # int32[L] number of active steps to replay
+    has_masked: jax.Array,  # bool[L] replay one masked (eta_m = 0) step too
+    *,
+    lam,  # RUNTIME scalar (see module comment: hoisting vs FMA)
+    lam1: float,
+    lam2: float,
+) -> jax.Array:
+    """Replay ``k_active`` untouched active steps, then at most one masked
+    step — the exact catch-up primitive shared by kernels and references."""
+
+    def body(i, cur):
+        stepped = _lazy_step_ref(cur, z, eta, lam=lam, lam1=lam1, lam2=lam2)
+        return jnp.where(i < k_active, stepped, cur)
+
+    w = jax.lax.fori_loop(0, jnp.max(k_active, initial=0), body, w)
+    masked = _lazy_step_ref(w, z, eta * 0.0, lam=lam, lam1=lam1, lam2=lam2)
+    return jnp.where(has_masked, masked, w)
+
+
+def _first_occurrence(flat: jax.Array) -> jax.Array:
+    """first[e] = smallest lane index holding the same feature id as lane e.
+
+    Accumulating per-feature gradient contributions at first-occurrence
+    lanes **in flat order** reproduces the dense scatter-add's per-slot
+    accumulation order, hence its floating point, without materializing
+    the dense block.  O(L^2) compare, L = u * nnz_l (tiny on the sparse
+    hot path this family exists for)."""
+    return jnp.argmax(flat[:, None] == flat[None, :], axis=1)
+
+
+def lazy_catchup_ref(
+    w: jax.Array,  # [d_block]
+    last: jax.Array,  # int32[d_block] steps already applied per feature
+    z: jax.Array,  # [d_block]
+    indices: jax.Array,  # int32[u, nnz_l] ids touched at step ``step``
+    eta: jax.Array | float,  # UNMASKED step size
+    step: jax.Array,  # int32 current inner-step index m
+    stop: jax.Array,  # int32 number of active (unmasked) steps this epoch
+    *,
+    lam,  # RUNTIME scalar (see module comment: hoisting vs FMA)
+    lam1: float,
+    lam2: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Bring every feature touched at inner step ``step`` up to date by
+    replaying its deferred steps ``last[j] .. step-1``; marks them as
+    updated through ``step`` (the eager touch update follows)."""
+    flat = indices.reshape(-1)
+    ll = last[flat]
+    k_active = jnp.maximum(jnp.minimum(stop, step) - ll, 0)
+    has_masked = (step - ll) > k_active
+    wl = lazy_replay_ref(
+        w[flat], z[flat], eta, k_active, has_masked, lam=lam, lam1=lam1,
+        lam2=lam2,
+    )
+    return w.at[flat].set(wl), last.at[flat].set(step + 1)
+
+
+def lazy_touch_update_ref(
+    w: jax.Array,  # [d_block], caught up at the touched ids
+    indices: jax.Array,  # int32[u, nnz_l]
+    values: jax.Array,  # [u, nnz_l]
+    coef: jax.Array,  # [u]
+    z: jax.Array,  # [d_block]
+    eta: jax.Array | float,  # masked step size eta * mask[m]
+    *,
+    lam: float,
+    lam1: float,
+    lam2: float,
+) -> jax.Array:
+    """The dense prox update evaluated only at the touched ids: O(u * nnz_l)
+    work, bit-identical at those ids to :func:`prox_update_ref`."""
+    flat = indices.reshape(-1)
+    contrib = (values * coef[..., None]).reshape(-1)
+    first = _first_occurrence(flat)
+    g = jnp.zeros_like(contrib).at[first].add(contrib)
+    wl = w[flat]
+    g = g + z[flat]
+    g = g + lam * wl
+    v = wl - eta * g
+    if lam1 != 0.0 or lam2 != 0.0:
+        v = jnp.sign(v) * jnp.maximum(jnp.abs(v) - eta * lam1, 0.0)
+        if lam2 != 0.0:
+            v = v / (1.0 + eta * lam2)
+    return w.at[flat].set(v[first])
+
+
+def lazy_flush_ref(
+    w: jax.Array,  # [d_block]
+    last: jax.Array,  # int32[d_block]
+    z: jax.Array,  # [d_block]
+    eta: jax.Array | float,  # UNMASKED step size
+    total: jax.Array,  # int32 total inner steps M this epoch
+    stop: jax.Array,  # int32 number of active steps
+    *,
+    lam,  # RUNTIME scalar (see module comment: hoisting vs FMA)
+    lam1: float,
+    lam2: float,
+) -> jax.Array:
+    """Epoch-end reconciliation: replay every feature's deferred steps so
+    the returned block equals the dense iterate after all M steps."""
+    k_active = jnp.maximum(jnp.minimum(stop, total) - last, 0)
+    has_masked = (total - last) > k_active
+    return lazy_replay_ref(
+        w, z, eta, k_active, has_masked, lam=lam, lam1=lam1, lam2=lam2
+    )
+
+
+def lazy_proba_update_ref(
+    w: jax.Array,  # [d_block]
+    indices: jax.Array,  # int32[u, nnz_l]
+    values: jax.Array,  # [u, nnz_l]
+    coef: jax.Array,  # [u]
+    z: jax.Array,  # [d_block]
+    corr: jax.Array,  # [d_block] per-feature step corrections (>= 1)
+    eta: jax.Array | float,  # masked step size eta * mask[m]
+    *,
+    lam: float,
+    lam1: float,
+    lam2: float,
+) -> jax.Array:
+    """Probabilistic (unbiased) lazy step: only touched features move, but
+    their deterministic decay — the ``z + lam*w`` drift and the prox
+    strengths — is scaled by ``corr[j] = 1 / P(j touched per step)`` so the
+    per-step expected update matches the dense oracle's deterministic part.
+    No flush needed: ``w`` is always this algorithm's materialized iterate."""
+    flat = indices.reshape(-1)
+    contrib = (values * coef[..., None]).reshape(-1)
+    first = _first_occurrence(flat)
+    g = jnp.zeros_like(contrib).at[first].add(contrib)
+    wl = w[flat]
+    cl = corr[flat]
+    v = wl - eta * (g + cl * (z[flat] + lam * wl))
+    if lam1 != 0.0 or lam2 != 0.0:
+        v = jnp.sign(v) * jnp.maximum(jnp.abs(v) - eta * lam1 * cl, 0.0)
+        if lam2 != 0.0:
+            v = v / (1.0 + eta * lam2 * cl)
+    return w.at[flat].set(v[first])
+
+
 def svrg_update_ref(
     w: jax.Array, g_sparse: jax.Array, z: jax.Array, *, eta: float, lam: float
 ) -> jax.Array:

@@ -1,5 +1,16 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+# The flag must land before jax initializes, hence before any jax import —
+# callers (benchmarks.roofline auto-populate, the tier-1 smoke test) run
+# this module in a SUBPROCESS for the same reason.  --smoke lowers one
+# reduced combo on an 8-device mesh; forcing 512 host devices for that
+# would slow the compile for nothing.
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8"
+    if "--smoke" in sys.argv
+    else "--xla_force_host_platform_device_count=512"
+)
 
 """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
 combination against the production meshes, with ShapeDtypeStruct inputs
@@ -327,6 +338,38 @@ def dryrun_fdsvrg(multi_pod: bool) -> dict:
     }
 
 
+def dryrun_smoke() -> dict:
+    """ONE reduced arch x mesh combo, fast enough for CI: smollm-360m at
+    CPU-smoke scale on a 2x4 host mesh (the tests/test_dryrun_small.py
+    shape).  Gives benchmarks.roofline at least one real compiled row to
+    render when results/dryrun/ is empty."""
+    import dataclasses
+
+    from repro.configs import reduced_config
+    from repro.dist.compat import make_mesh
+
+    arch = "smollm-360m"
+    mesh = make_mesh((2, 4), ("data", "model"))
+    cfg = dataclasses.replace(reduced_config(get_config(arch)), ssm_chunk=16)
+    shape = InputShape("train_64", 64, 8, "train")
+    ctx = transformer.make_ctx(mesh, cfg, overrides=_rules_overrides(shape))
+    t0 = time.time()
+    lowered = _lower_combo(cfg, shape, mesh, ctx, 1)
+    compiled = lowered.compile()
+    rf = roofline_lib.from_compiled(compiled, chips=8)
+    return {
+        "arch": f"{arch}-reduced",
+        "shape": "train(seq=64,batch=8)",
+        "mesh": "2x4",
+        "chips": 8,
+        "compile_s": round(time.time() - t0, 2),
+        "memory_analysis": _memory_analysis_dict(compiled),
+        "collectives": roofline_lib.collective_bytes(compiled.as_text()),
+        "roofline": rf.as_dict(),
+        "ok": True,
+    }
+
+
 def combos():
     for arch in sorted(ARCHS):
         for shape_name in INPUT_SHAPES:
@@ -342,12 +385,36 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--fdsvrg", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one reduced arch x mesh combo on 8 host devices")
     ap.add_argument("--out-dir", default=None)
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
 
     out_dir = args.out_dir or os.path.abspath(RESULTS_DIR)
     os.makedirs(out_dir, exist_ok=True)
+
+    if args.smoke:
+        path = os.path.join(out_dir, "smoke__train_64__2x4.json")
+        try:
+            res = dryrun_smoke()
+            rl = res["roofline"]
+            print(f"[OK] smoke: compile={res['compile_s']}s "
+                  f"dominant={rl['dominant']}", flush=True)
+            failures = 0
+        except Exception as e:
+            res = {
+                "arch": "smollm-360m-reduced", "shape": "train(seq=64,batch=8)",
+                "mesh": "2x4", "ok": False, "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            print(f"[FAIL] smoke: {type(e).__name__}: {str(e)[:300]}",
+                  flush=True)
+            failures = 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2, default=str)
+        print(f"done; {failures} failures", flush=True)
+        return failures
 
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     jobs = []

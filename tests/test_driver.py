@@ -113,6 +113,34 @@ def test_measured_meter_matches_analytic_schedule(data, method, q):
         assert h.comm_scalars == (h.outer + 1) * c1
 
 
+@pytest.mark.parametrize("lazy", ["exact", "proba"])
+def test_lazy_updates_comm_parity_with_eager_and_analytic(data, lazy):
+    """Lazy inner steps change WHERE the decay is applied, never WHAT is
+    communicated: per inner step each worker still all-reduces exactly one
+    u-vector of partial margins.  Guard against drift — the lazy run's
+    meter must equal the eager run's (and the analytic schedule) exactly,
+    scalar for scalar, round for round, and the modeled-time history must
+    be identical record by record."""
+    from benchmarks.common import analytic_outer
+
+    n = data.num_instances
+    outers, u, q = 2, 2, 4
+    cluster = ClusterModel()
+    cfg = SVRGConfig(eta=0.2, inner_steps=n // u, outer_iters=outers,
+                     batch_size=u, seed=3)
+    part = balanced(data.dim, q)
+    eager = run_fdsvrg(data, part, LOSS, REG, cfg, cluster)
+    lazy_res = run_fdsvrg(data, part, LOSS, REG, cfg, cluster,
+                          lazy_updates=lazy)
+    assert lazy_res.meter.total_scalars == eager.meter.total_scalars
+    assert lazy_res.meter.total_rounds == eager.meter.total_rounds
+    _, c1 = analytic_outer("fdsvrg", _spec_of(data), q, u=u, cluster=cluster)
+    assert lazy_res.meter.total_scalars == outers * c1
+    for he, hl in zip(eager.history, lazy_res.history):
+        assert hl.comm_scalars == he.comm_scalars
+        assert hl.modeled_time_s == he.modeled_time_s
+
+
 def test_worker_simulation_meters_like_the_jitted_driver(data):
     """The message-level executable spec lands on the same closed form."""
     q, outers, m = 4, 2, 10

@@ -103,3 +103,18 @@ def test_small_mesh_dryrun_subprocess():
     )
     assert proc.returncode == 0, proc.stderr[-4000:]
     assert "SMALL-DRYRUN-OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_roofline_auto_populates_and_measures_at_least_one_combo(tmp_path, monkeypatch):
+    """Regression guard for the bench that measured nothing: on a fresh
+    checkout (empty results/dryrun/) `benchmarks.roofline.run` must
+    auto-invoke the dryrun --smoke combo (in a subprocess, so XLA_FLAGS
+    land before jax initializes) and come back with >= 1 OK row instead
+    of silently rendering an empty table."""
+    import benchmarks.roofline as roofline
+
+    monkeypatch.setattr(roofline, "DRYRUN_DIR", str(tmp_path / "dryrun"))
+    _, rows = roofline.run()
+    ok = sum(1 for r in rows if r and r[3] != "FAIL")
+    assert ok >= 1, rows
