@@ -1,0 +1,234 @@
+"""Chaos benchmark: FD-SVRG under seeded fault plans.
+
+Runs the fdsvrg driver (and the object-level worker simulation for the
+corruption plan, whose fault needs an *executing* collective) under a
+set of sampled :class:`repro.dist.FaultPlan` s and reports, per plan:
+
+* **convergence to the fault-free optimum**: the faulty run's final
+  objective gap to the clean run's final objective, normalized by the
+  clean run's total objective decrease — ``converged`` means the faulty
+  run recovered at least 90% of the clean run's progress;
+* **honest retry overhead**: the exact extra scalars metered under the
+  ``retry`` (and, for recovered plans, ``abort``) kinds, and the check
+  that ``total == fault-free schedule + retry + abort`` held;
+* modeled-time overhead (timeouts, backoff, straggler delays, abort
+  recompute are all charged to the shared clock).
+
+The fault/accounting numbers are exactly reproducible from the plan
+seeds; the one wall timing (a fault-free driver run) follows the shared
+median+spread convention of :func:`benchmarks.common.measure_us`.
+
+Standalone entry point with a ``--quick`` smoke mode for CI:
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench [--quick]
+
+writes results/benchmarks/chaos.csv and BENCH_chaos.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import measure_us, write_bench_json, write_csv
+from repro.core import losses
+from repro.core.driver import RecoveryPolicy
+from repro.core.fdsvrg import (
+    SVRGConfig,
+    fdsvrg_worker_simulation,
+    run_fdsvrg,
+)
+from repro.core.partition import balanced
+from repro.data.synthetic import make_sparse_classification
+from repro.dist import FaultPlan, FaultyBackend, RetryPolicy, SimBackend
+
+def _plans(cfg) -> list[tuple[str, dict]]:
+    """The sampled fault plans (>= 3 per the acceptance criteria).  Drop
+    and straggler plans retransmit deterministic partials, so they must
+    land bitwise on the clean optimum; crash and corruption alter the
+    trajectory and recover through epoch-abort-to-snapshot.  The
+    corruption probability is per-collective, so it scales with the run
+    shape to an expected ~1.5 poisoned payloads per run — enough to
+    force recovery without drowning every epoch."""
+    corrupt_p = 1.5 / (cfg.outer_iters * cfg.inner_steps)
+    return [
+        ("drop_light", dict(seed=11, drop_prob=0.05)),
+        ("drop_heavy", dict(seed=13, drop_prob=0.25)),
+        ("drop_straggle", dict(seed=17, drop_prob=0.10, straggler_prob=0.20,
+                               straggler_delay_s=2e-3)),
+        ("crash_mid", dict(seed=19, crash_at_outer=(2,))),
+        ("corrupt", dict(seed=23, corrupt_prob=corrupt_p)),
+    ]
+
+RETRY = RetryPolicy(max_retries=10, timeout_s=0.05)
+RECOVERY = RecoveryPolicy(max_epoch_retries=4)
+#: Corruption is transient (the retried epoch draws fresh randomness and
+#: a fresh fault stream), so the right recovery re-runs at FULL step
+#: size: backing eta off — the medicine for a genuinely divergent step
+#: size — would only slow the healthy retries down.
+RECOVERY_TRANSIENT = RecoveryPolicy(max_epoch_retries=4, eta_backoff=1.0)
+
+#: Recovered fraction of the clean run's objective decrease required to
+#: call a faulty run converged.
+CONVERGENCE_FRACTION = 0.9
+
+
+def _problem(quick: bool):
+    d, n, nnz, m, outers = (
+        (512, 64, 8, 16, 4) if quick else (4096, 512, 16, 64, 6)
+    )
+    data = make_sparse_classification(
+        dim=d, num_instances=n, nnz_per_instance=nnz, seed=4
+    )
+    cfg = SVRGConfig(eta=0.5, inner_steps=m, outer_iters=outers, seed=9)
+    return data, balanced(d, 4), losses.logistic, losses.l2(1e-3), cfg
+
+
+def _run_plan(name, plan_kwargs, data, part, loss, reg, cfg, clean):
+    plan = FaultPlan(**plan_kwargs)
+    q = part.num_blocks
+    backend = FaultyBackend(SimBackend(q), plan, RETRY)
+    # The jitted fdsvrg driver meters without executing collectives, so a
+    # corruption fault (which poisons an executed payload) needs the
+    # object-level worker simulation; every other plan runs the fast
+    # driver.  Both sit on the same outer-loop harness and meter.
+    runner = fdsvrg_worker_simulation if plan.corrupt_prob > 0 else run_fdsvrg
+    recovery = RECOVERY_TRANSIENT if plan.corrupt_prob > 0 else RECOVERY
+    kwargs = dict(backend=backend, recovery=recovery)
+    if runner is run_fdsvrg:
+        res = run_fdsvrg(data, part, loss, reg, cfg, **kwargs)
+    else:
+        res = fdsvrg_worker_simulation(data, part, loss, reg, cfg, **kwargs)
+
+    f_init = clean.history[0].objective
+    f_star = clean.final_objective()
+    decrease = max(f_init - f_star, 1e-12)
+    gap = max(0.0, res.final_objective() - f_star)
+    m = res.meter
+    retry = int(m.by_kind.get("retry", 0))
+    abort = int(m.by_kind.get("abort", 0))
+    schedule = clean.meter.total_scalars
+    # Aborted attempts: each abort charges one 2*q*N gradient re-broadcast.
+    # In the object-level sim a corrupted epoch runs to completion before
+    # the divergence guard fires, so the aborted attempt has *already*
+    # metered one outer's worth of collectives — that traffic happened and
+    # the honest total carries it.  The jitted driver's crash fires before
+    # any epoch metering, so its aborted attempts replay nothing.
+    n_aborts = abort // (2 * q * data.num_instances) if abort else 0
+    per_outer = schedule // cfg.outer_iters
+    replay = n_aborts * per_outer if plan.corrupt_prob > 0 else 0
+    return {
+        "plan": name,
+        "fault_plan": {k: list(v) if isinstance(v, tuple) else v
+                       for k, v in plan_kwargs.items()},
+        "driver": "fdsvrg_sim" if runner is fdsvrg_worker_simulation
+        else "fdsvrg",
+        "final_objective": res.final_objective(),
+        "fault_free_objective": f_star,
+        "objective_gap": gap,
+        "gap_over_decrease": gap / decrease,
+        "converged": bool(gap <= (1.0 - CONVERGENCE_FRACTION) * decrease),
+        "schedule_scalars": schedule,
+        "retry_scalars": retry,
+        "abort_scalars": abort,
+        "replay_scalars": replay,
+        "epoch_aborts": n_aborts,
+        "retry_overhead": retry / schedule,
+        "accounting_exact": bool(
+            m.total_scalars == schedule + retry + abort + replay
+        ),
+        "modeled_time_s": res.history[-1].modeled_time_s,
+        "modeled_overhead_s": (
+            res.history[-1].modeled_time_s
+            - clean.history[-1].modeled_time_s
+        ),
+    }
+
+
+def run(quick: bool = False):
+    data, part, loss, reg, cfg = _problem(quick)
+    clean = run_fdsvrg(data, part, loss, reg, cfg)
+    # The fault/accounting numbers above are seeded and exact; the one
+    # *timing* this suite reports (wall time of a fault-free driver run)
+    # follows the shared median+spread convention.
+    clean_timing = measure_us(
+        lambda: run_fdsvrg(data, part, loss, reg, cfg), repeats=3
+    )
+    results = [
+        _run_plan(name, kw, data, part, loss, reg, cfg, clean)
+        for name, kw in _plans(cfg)
+    ]
+    rows = [
+        [r["plan"], r["driver"], f"{r['objective_gap']:.3e}",
+         str(r["converged"]), str(r["retry_scalars"]),
+         str(r["abort_scalars"]), f"{r['retry_overhead']:.3f}",
+         str(r["accounting_exact"])]
+        for r in results
+    ]
+    path = write_csv(
+        "chaos.csv",
+        ["plan", "driver", "objective_gap", "converged", "retry_scalars",
+         "abort_scalars", "retry_overhead", "accounting_exact"],
+        rows,
+    )
+    summary = {
+        "clean_final_objective": clean.final_objective(),
+        "clean_total_scalars": clean.meter.total_scalars,
+        "clean_run_us": clean_timing["us"],
+        "clean_run_spread": clean_timing["spread"],
+        "timing_repeats": clean_timing["repeats"],
+        "plans": results,
+        "all_converged": all(r["converged"] for r in results),
+        "all_accounting_exact": all(r["accounting_exact"] for r in results),
+    }
+    return path, rows, summary
+
+
+def report_payload(summary: dict, wall_us: float, quick: bool) -> dict:
+    """The BENCH_chaos.json schema — one builder for the standalone and
+    the aggregate (benchmarks.run) entry points.  wall_us is the suite's
+    wall time (single timing; the per-plan numbers are metered/modeled,
+    hence exactly reproducible — no repeats needed)."""
+    return {
+        "wall_us": wall_us,
+        "quick": quick,
+        "timing": {"estimator": "median", "spread": "(max-min)/median"},
+        "clean_run_us": summary["clean_run_us"],
+        "spread": summary["clean_run_spread"],
+        "num_plans": len(summary["plans"]),
+        "all_converged": summary["all_converged"],
+        "all_accounting_exact": summary["all_accounting_exact"],
+        "max_retry_overhead": max(
+            r["retry_overhead"] for r in summary["plans"]
+        ),
+        "convergence_fraction": CONVERGENCE_FRACTION,
+        "detail": summary,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes (CI smoke mode)")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    path, rows, summary = run(quick=args.quick)
+    payload = report_payload(
+        summary, (time.perf_counter() - t0) * 1e6, args.quick)
+    write_bench_json("chaos", payload)
+    print(f"chaos: wrote {len(rows)} rows to {path}")
+    for r in rows:
+        print("  ", ",".join(map(str, r)))
+    print(
+        f"  {payload['num_plans']} fault plans: "
+        f"converged={payload['all_converged']}, "
+        f"accounting exact={payload['all_accounting_exact']}, "
+        f"max retry overhead "
+        f"{payload['max_retry_overhead'] * 100:.1f}% of schedule"
+    )
+    if not (payload["all_converged"] and payload["all_accounting_exact"]):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -79,6 +79,35 @@ def analytic_schedule(method: str, spec, q: int, outers: int, u: int = FD_BATCH)
     return [((i + 1) * t1, (i + 1) * c1) for i in range(outers)]
 
 
+def measure_us(fn, repeats: int = 7) -> dict:
+    """Median-over-repeats wall time of ``fn()`` in microseconds.
+
+    Epoch timings on a shared box show ~50% run-to-run swings (CHANGES
+    PR 6), so a single number is not honest: BENCH payloads report the
+    **median** (robust central estimate) together with a ``spread``
+    field — (max - min) / median over the timed repeats — so a reader
+    can tell a stable 2x from a noisy one.  ``fn`` is called once,
+    untimed, to absorb compilation before the timed repeats; callers are
+    responsible for blocking on async results inside ``fn`` (e.g.
+    ``jax.block_until_ready``).
+    """
+    import statistics
+    import time as _time
+
+    fn()  # warm / compile
+    samples = []
+    for _ in range(max(1, repeats)):
+        t0 = _time.perf_counter()
+        fn()
+        samples.append((_time.perf_counter() - t0) * 1e6)
+    med = statistics.median(samples)
+    return {
+        "us": med,
+        "spread": (max(samples) - min(samples)) / med if med > 0 else 0.0,
+        "repeats": len(samples),
+    }
+
+
 def ensure_dir() -> str:
     d = os.path.abspath(RESULTS_DIR)
     os.makedirs(d, exist_ok=True)

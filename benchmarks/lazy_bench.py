@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import write_bench_json, write_csv
+from benchmarks.common import measure_us, write_bench_json, write_csv
 from repro.core import fdsvrg, losses
 from repro.core.fdsvrg import SVRGConfig, run_fdsvrg
 from repro.core.partition import balanced
@@ -41,16 +41,12 @@ from repro.data.block_csr import BlockCSR
 from repro.data.synthetic import make_sparse_classification
 
 
-def _timeit(fn, iters=5) -> float:
-    """Min over iters: epoch timings on a shared box are noisy (50%
-    run-to-run swings observed); the minimum is the stable estimator."""
-    jax.block_until_ready(fn())  # warm / compile
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6  # us
+def _timeit(fn, iters=7) -> dict:
+    """Median-over-repeats with a spread field (benchmarks.common
+    .measure_us): epoch timings on a shared box are noisy (50%
+    run-to-run swings observed), so the payload carries the noise
+    estimate instead of hiding it."""
+    return measure_us(lambda: jax.block_until_ready(fn()), repeats=iters)
 
 
 def _epoch_inputs(quick: bool):
@@ -116,21 +112,29 @@ def bench_inner_epoch(quick: bool) -> tuple[list[list], dict]:
         b = np.asarray(lazy_exact())
         bitwise = bool((a.view(np.uint32) == b.view(np.uint32)).all())
 
-        t_dense = _timeit(dense)
-        t_exact = _timeit(lazy_exact)
-        t_proba = _timeit(lazy_proba)
+        m_dense = _timeit(dense)
+        m_exact = _timeit(lazy_exact)
+        m_proba = _timeit(lazy_proba)
+        t_dense, t_exact, t_proba = m_dense["us"], m_exact["us"], m_proba["us"]
         rows += [
             [f"inner_epoch_dense_{rname}", f"{t_dense:.1f}",
-             f"[M={shape['M']},d={shape['d']}]"],
+             f"[M={shape['M']},d={shape['d']}] "
+             f"spread={m_dense['spread']:.2f}"],
             [f"inner_epoch_lazy_exact_{rname}", f"{t_exact:.1f}",
-             f"{t_dense / t_exact:.2f}x vs dense, bitwise={bitwise}"],
+             f"{t_dense / t_exact:.2f}x vs dense, bitwise={bitwise}, "
+             f"spread={m_exact['spread']:.2f}"],
             [f"inner_epoch_lazy_proba_{rname}", f"{t_proba:.1f}",
-             f"{t_dense / t_proba:.2f}x vs dense"],
+             f"{t_dense / t_proba:.2f}x vs dense, "
+             f"spread={m_proba['spread']:.2f}"],
         ]
         summary["regs"][rname] = {
             "dense_us": t_dense,
             "lazy_exact_us": t_exact,
             "lazy_proba_us": t_proba,
+            "dense_spread": m_dense["spread"],
+            "lazy_exact_spread": m_exact["spread"],
+            "lazy_proba_spread": m_proba["spread"],
+            "timing_repeats": m_dense["repeats"],
             "speedup_exact": t_dense / t_exact,
             "speedup_proba": t_dense / t_proba,
             "exact_bitwise_equal": bitwise,
@@ -144,6 +148,10 @@ def bench_inner_epoch(quick: bool) -> tuple[list[list], dict]:
     )
     summary["exact_bitwise_equal"] = all(
         r["exact_bitwise_equal"] for r in summary["regs"].values()
+    )
+    summary["spread"] = max(
+        max(r["dense_spread"], r["lazy_exact_spread"], r["lazy_proba_spread"])
+        for r in summary["regs"].values()
     )
     return rows, summary
 
@@ -192,8 +200,10 @@ def report_payload(summary: dict, wall_us: float, quick: bool) -> dict:
     return {
         "wall_us": wall_us,
         "quick": quick,
+        "timing": {"estimator": "median", "spread": "(max-min)/median"},
         "speedup_exact": summary["inner_epoch"]["speedup_exact"],
         "speedup_proba": summary["inner_epoch"]["speedup_proba"],
+        "spread": summary["inner_epoch"]["spread"],
         "exact_bitwise_equal": summary["inner_epoch"]["exact_bitwise_equal"],
         "comm_parity": summary["comm"]["comm_parity"],
         "detail": summary,

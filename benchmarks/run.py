@@ -22,6 +22,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        chaos_bench,
         convergence,
         kernels_bench,
         lambda_sensitivity,
@@ -105,6 +106,20 @@ def main() -> None:
     )
     write_bench_json(
         "lazy", lazy_bench.report_payload(lazy_summary, us, args.quick)
+    )
+
+    t = time.perf_counter()
+    _, rows, chaos_summary = chaos_bench.run(quick=args.quick)
+    for r in rows:
+        print(",".join(map(str, r)))
+    us = stamp(
+        "chaos_total", t,
+        f"{len(chaos_summary['plans'])} plans;"
+        f"converged={chaos_summary['all_converged']};"
+        f"accounting={chaos_summary['all_accounting_exact']}",
+    )
+    write_bench_json(
+        "chaos", chaos_bench.report_payload(chaos_summary, us, args.quick)
     )
 
     t = time.perf_counter()

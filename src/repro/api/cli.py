@@ -45,6 +45,14 @@ def _parser() -> argparse.ArgumentParser:
     p.add_argument("--lazy-updates", choices=("exact", "proba"), default=None,
                    help="O(nnz) delayed-decay inner steps (lazy-capable "
                    "methods only)")
+    p.add_argument("--checkpoint-dir", default=None,
+                   help="persist a rolling outer-loop checkpoint here "
+                   "(checkpoint-capable methods only)")
+    p.add_argument("--checkpoint-every", type=int, default=None,
+                   help="outers between checkpoint writes (default 1)")
+    p.add_argument("--resume", action="store_true",
+                   help="resume from --checkpoint-dir when a checkpoint "
+                   "exists (bit-identical to the uninterrupted run)")
     p.add_argument("--quick", action="store_true",
                    help="CI smoke shape: 2 outers, inner loop capped at 300")
     p.add_argument("--list", action="store_true",
@@ -110,6 +118,12 @@ def main(argv: list[str] | None = None) -> int:
         overrides["use_kernels"] = True
     if args.lazy_updates is not None:
         overrides["lazy_updates"] = args.lazy_updates
+    if args.checkpoint_dir is not None:
+        overrides["checkpoint_dir"] = args.checkpoint_dir
+    if args.checkpoint_every is not None:
+        overrides["checkpoint_every"] = args.checkpoint_every
+    if args.resume:
+        overrides["resume"] = True
     if args.quick:
         overrides.setdefault("outer_iters", 2)
         overrides.setdefault("inner_steps", min(300, PAPER_MAX_INNER))

@@ -105,6 +105,9 @@ class FDSVRGClassifier:
         use_kernels: bool = False,
         lazy_updates: str | None = None,
         cluster=None,
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 1,
+        resume: bool = False,
     ) -> None:
         self.method = method
         self.workers = workers
@@ -121,6 +124,9 @@ class FDSVRGClassifier:
         self.use_kernels = use_kernels
         self.lazy_updates = lazy_updates
         self.cluster = cluster
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.resume = resume
         self._fits = 0
 
     # -- sklearn-style attributes set by fit: coef_, classes_, history_ --
@@ -148,6 +154,11 @@ class FDSVRGClassifier:
             lazy_updates=self.lazy_updates,
             cluster=self.cluster,
             init_w=init_w,
+            checkpoint_dir=self.checkpoint_dir,
+            checkpoint_every=self.checkpoint_every,
+            # only the first solve of this estimator resumes; warm-start
+            # continuations already carry their state in init_w
+            resume=self.resume and self._fits == 0,
         )
 
     def _encode_labels(self, raw) -> np.ndarray:

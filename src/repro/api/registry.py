@@ -48,7 +48,7 @@ from repro.api.cache import BLOCK_CACHE
 from repro.api.spec import PAPER, ExperimentSpec
 from repro.core import baselines
 from repro.core import losses as losses_lib
-from repro.core.driver import RunResult
+from repro.core.driver import CheckpointPolicy, RunResult
 from repro.core.fdsvrg import (
     SVRGConfig,
     fdsvrg_worker_simulation,
@@ -81,6 +81,7 @@ class MethodInfo:
     supports_lazy: bool = False  # lazy O(nnz) delayed-decay inner steps
     supports_option_ii: bool = True
     needs_mesh: bool = False
+    supports_checkpoint: bool = False  # outer-loop checkpoint/resume
     # "paper" auto-default operating point (tuned on the scaled sets,
     # fixed like the paper; lifted from benchmarks/common.py):
     paper_eta: float = 1.0
@@ -111,6 +112,7 @@ def register_method(
     supports_lazy: bool = False,
     supports_option_ii: bool = True,
     needs_mesh: bool = False,
+    supports_checkpoint: bool = False,
     paper_eta: float,
     paper_batch: int = 1,
     inner_rule: str,
@@ -137,6 +139,7 @@ def register_method(
             supports_lazy=supports_lazy,
             supports_option_ii=supports_option_ii,
             needs_mesh=needs_mesh,
+            supports_checkpoint=supports_checkpoint,
             paper_eta=paper_eta,
             paper_batch=paper_batch,
             inner_rule=inner_rule,
@@ -199,6 +202,14 @@ def _validate(spec: ExperimentSpec, info: MethodInfo) -> None:
             f"method {info.name!r} does not consume tree_mode="
             f"{spec.tree_mode!r}; the collective topology is a shard_map "
             "knob (fdsvrg_sharded) — it would not be honored here"
+        )
+    if spec.checkpoint_dir is not None and not info.supports_checkpoint:
+        raise ValueError(
+            f"method {info.name!r} does not support checkpoint/resume "
+            f"(checkpointing methods: "
+            f"{', '.join(sorted(m for m, i in METHODS.items() if i.supports_checkpoint))}). "
+            "checkpoint_dir would be silently ignored; it fails here so a "
+            "run that believes it is durable actually is."
         )
 
 
@@ -271,6 +282,7 @@ def capability_matrix() -> list[dict]:
             "lazy": i.supports_lazy,
             "option_II": i.supports_option_ii,
             "mesh": i.needs_mesh,
+            "checkpoint": i.supports_checkpoint,
             "paper_eta": i.paper_eta,
             "paper_batch": i.paper_batch,
             "inner_rule": i.inner_rule,
@@ -296,8 +308,19 @@ def _svrg_config(spec: ExperimentSpec, p: ResolvedRun) -> SVRGConfig:
     )
 
 
+def _checkpoint_policy(spec: ExperimentSpec) -> CheckpointPolicy | None:
+    if spec.checkpoint_dir is None:
+        return None
+    return CheckpointPolicy(
+        directory=spec.checkpoint_dir,
+        every=spec.checkpoint_every,
+        resume=spec.resume,
+    )
+
+
 @register_method(
     "serial", backend="none", supports_kernels=True, supports_lazy=True,
+    supports_checkpoint=True,
     paper_eta=2.0, inner_rule="n",
     summary="Algorithm 2 (serial SVRG), the proof reference",
 )
@@ -305,12 +328,13 @@ def _solve_serial(spec, data, p, mesh) -> RunResult:
     return run_serial_svrg(
         data, losses_lib.LOSSES[spec.loss], spec.reg, _svrg_config(spec, p),
         use_kernels=spec.use_kernels, lazy_updates=spec.lazy_updates,
-        init_w=spec.init_w,
+        init_w=spec.init_w, checkpoint=_checkpoint_policy(spec),
     )
 
 
 @register_method(
     "fdsvrg", backend="sim", supports_kernels=True, supports_lazy=True,
+    supports_checkpoint=True,
     paper_eta=2.0, paper_batch=PAPER_FD_BATCH, inner_rule="n_over_u",
     summary="Algorithm 1 (FD-SVRG), jitted metered simulation",
 )
@@ -320,12 +344,13 @@ def _solve_fdsvrg(spec, data, p, mesh) -> RunResult:
         _svrg_config(spec, p), spec.cluster,
         use_kernels=spec.use_kernels, lazy_updates=spec.lazy_updates,
         block_data=BLOCK_CACHE.get(data, p.q),
-        init_w=spec.init_w,
+        init_w=spec.init_w, checkpoint=_checkpoint_policy(spec),
     )
 
 
 @register_method(
     "fdsvrg_sim", backend="sim", supports_kernels=True, supports_lazy=True,
+    supports_checkpoint=True,
     paper_eta=2.0, paper_batch=PAPER_FD_BATCH, inner_rule="n_over_u",
     summary="Algorithm 1, explicit q-worker object-level simulation",
 )
@@ -335,7 +360,7 @@ def _solve_fdsvrg_sim(spec, data, p, mesh) -> RunResult:
         _svrg_config(spec, p), SimBackend(p.q, spec.cluster),
         use_kernels=spec.use_kernels, lazy_updates=spec.lazy_updates,
         block_data=BLOCK_CACHE.get(data, p.q),
-        init_w=spec.init_w,
+        init_w=spec.init_w, checkpoint=_checkpoint_policy(spec),
     )
 
 

@@ -70,6 +70,13 @@ class ExperimentSpec:
     lazy_updates: str | None = None
     cluster: ClusterModel | None = None  # None -> the backend's default
     init_w: jax.Array | None = None  # warm start (None -> zeros)
+    # Outer-loop checkpoint/resume (methods with supports_checkpoint):
+    # a rolling checkpoint under checkpoint_dir every checkpoint_every
+    # outers; resume=True restores it when present (resume is proven
+    # bit-identical to the uninterrupted run).
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 1
+    resume: bool = False
     # shard_map-only knobs (validated against MethodInfo.needs_mesh):
     mesh: Any | None = None  # jax Mesh; None -> a 1-device ("model",) mesh
     tree_mode: str = "psum"  # "psum" | "butterfly"
@@ -118,6 +125,15 @@ class ExperimentSpec:
             raise ValueError(
                 f"lazy_updates must be None, 'exact', or 'proba', got "
                 f"{self.lazy_updates!r}"
+            )
+        if self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every >= 1 required, got {self.checkpoint_every!r}"
+            )
+        if self.checkpoint_dir is None and self.resume:
+            raise ValueError(
+                "resume=True needs checkpoint_dir= (there is nothing to "
+                "resume from without one)"
             )
 
     def replace(self, **changes) -> "ExperimentSpec":

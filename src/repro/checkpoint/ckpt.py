@@ -4,6 +4,16 @@ Orbax would be the production choice; this container implements the same
 contract directly: save/restore round-trips the full train state
 (params, optimizer, step) and records the PartitionSpec of every leaf so a
 restore onto a different mesh can re-shard deterministically.
+
+The meta sidecar (``<path>.json``) records every leaf's key path, shape,
+and dtype; :func:`restore` validates all three against the template
+pytree and fails with a one-line error on any mismatch — a checkpoint is
+either bit-exactly the state it claims to be, or it is rejected.  The
+sidecar also carries an optional free-form ``extra`` dict for state that
+is not an array (rng generator state, meter counters, loop indices);
+Python's json handles the arbitrary-precision ints a PCG64 state
+contains, and float round-trips are exact (repr-based), so resume from
+``extra`` is bit-identical too.
 """
 
 from __future__ import annotations
@@ -21,15 +31,18 @@ def _flatten(state):
     return leaves, treedef
 
 
-def save(path: str, state, specs=None) -> None:
+def save(path: str, state, specs=None, extra: dict | None = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = jax.tree_util.tree_flatten_with_path(state)[0]
     arrays = {}
-    meta = {"keys": [], "specs": {}}
+    meta = {"keys": [], "shapes": [], "dtypes": [], "specs": {}}
     for kp, leaf in flat:
         key = jax.tree_util.keystr(kp)
+        arr = np.asarray(leaf)
         meta["keys"].append(key)
-        arrays[f"arr_{len(arrays)}"] = np.asarray(leaf)
+        meta["shapes"].append(list(arr.shape))
+        meta["dtypes"].append(str(arr.dtype))
+        arrays[f"arr_{len(arrays)}"] = arr
     if specs is not None:
         spec_flat = jax.tree_util.tree_flatten_with_path(
             specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
@@ -37,24 +50,65 @@ def save(path: str, state, specs=None) -> None:
         meta["specs"] = {
             jax.tree_util.keystr(kp): str(s) for kp, s in spec_flat
         }
+    if extra is not None:
+        meta["extra"] = extra
     np.savez(path + ".npz", **arrays)
     with open(path + ".json", "w") as f:
         json.dump(meta, f)
 
 
 def restore(path: str, like):
-    """Restore into the structure of ``like`` (a template pytree)."""
+    """Restore into the structure of ``like`` (a template pytree).
+
+    Every leaf is validated against the template — key path (when the
+    sidecar is present), shape, and dtype must all match exactly; any
+    mismatch raises ``ValueError`` with a one-line diagnosis instead of
+    silently casting or misassigning.
+    """
     with np.load(path + ".npz") as data:
-        arrays = [data[f"arr_{i}"] for i in range(len(data.files))]
+        n = len(data.files)
+        missing = [f"arr_{i}" for i in range(n) if f"arr_{i}" not in data]
+        if missing:
+            raise ValueError(
+                f"checkpoint {path}.npz is malformed: missing {missing[0]} "
+                f"(expected arr_0..arr_{n - 1})"
+            )
+        arrays = [data[f"arr_{i}"] for i in range(n)]
     leaves, treedef = jax.tree_util.tree_flatten(like)
     if len(arrays) != len(leaves):
         raise ValueError(
             f"checkpoint has {len(arrays)} leaves, template has {len(leaves)}"
         )
-    restored = [
-        jnp.asarray(a, dtype=l.dtype) if hasattr(l, "dtype") else a
-        for a, l in zip(arrays, leaves)
+    flat_keys = [
+        jax.tree_util.keystr(kp)
+        for kp, _ in jax.tree_util.tree_flatten_with_path(like)[0]
     ]
+    meta = load_meta(path) if os.path.exists(path + ".json") else None
+    if meta is not None and meta.get("keys") and meta["keys"] != flat_keys:
+        bad = next(
+            (s, t) for s, t in zip(meta["keys"], flat_keys) if s != t
+        ) if len(meta["keys"]) == len(flat_keys) else (meta["keys"], flat_keys)
+        raise ValueError(
+            f"checkpoint tree structure mismatch: saved key {bad[0]!r} vs "
+            f"template key {bad[1]!r}"
+        )
+    restored = []
+    for key, a, l in zip(flat_keys, arrays, leaves):
+        want_shape = tuple(np.shape(l))
+        if tuple(a.shape) != want_shape:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(a.shape)}, "
+                f"template wants {want_shape}"
+            )
+        if hasattr(l, "dtype"):
+            if a.dtype != np.dtype(l.dtype):
+                raise ValueError(
+                    f"checkpoint leaf {key!r} has dtype {a.dtype}, template "
+                    f"wants {np.dtype(l.dtype)}"
+                )
+            restored.append(jnp.asarray(a))
+        else:
+            restored.append(a)
     return jax.tree_util.tree_unflatten(treedef, restored)
 
 

@@ -3,7 +3,10 @@
 from repro.core import losses
 from repro.core.comm import ClusterModel, CommMeter, TpuV5eModel
 from repro.core.driver import (
+    CheckpointPolicy,
+    DivergenceError,
     OuterRecord,
+    RecoveryPolicy,
     RunResult,
     make_same_iterate_eval,
     objective_from_margins,
@@ -25,7 +28,10 @@ __all__ = [
     "ClusterModel",
     "CommMeter",
     "TpuV5eModel",
+    "CheckpointPolicy",
+    "DivergenceError",
     "OuterRecord",
+    "RecoveryPolicy",
     "RunResult",
     "SVRGConfig",
     "full_gradient",

@@ -36,12 +36,37 @@ The harness owns the rng construction, wall-clock timing, and the
 serial, FD-SVRG (metered sim, worker simulation, shard_map), DSVRG, and
 the parameter-server baselines — reports identically and a new scenario
 is a one-place change.
+
+It also owns the failure semantics, because SVRG hands them to us: the
+replicated snapshot (w̃, z, s0) held at the top of each outer iteration
+is a complete, consistent recovery point, so both recovery paths are
+*epoch-abort-to-snapshot* — throw away the failed epoch and rerun it
+from state every worker already holds:
+
+* a **divergence guard** (:class:`RecoveryPolicy`): a non-finite or
+  exploding objective after an epoch (e.g. a corrupted collective
+  payload, or an eta too large for the spectrum) aborts the epoch,
+  scales eta down by ``eta_backoff``, and reruns from the snapshot;
+* **unrecoverable faults** (any :class:`repro.dist.FaultError`, e.g. a
+  worker crash or retries exhausted) abort the epoch the same way, with
+  the abort path's extra communication metered via the policy's
+  ``on_abort`` hook (the FD drivers default it to one full-gradient
+  redistribution).
+
+and **checkpoint/resume** (:class:`CheckpointPolicy`): every k outers
+the harness persists (w, snapshot, rng state, meter counters, modeled
+time, history) through :mod:`repro.checkpoint.ckpt`; a resumed run is
+bit-identical to the uninterrupted one — iterates, objectives, meter
+counters, and modeled time exactly equal (pinned in
+``tests/test_faults.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
+import os
 import time
 from typing import Callable
 
@@ -49,8 +74,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import ckpt
 from repro.core import losses as losses_lib
-from repro.dist import Collectives, CommMeter
+from repro.dist import Collectives, CommMeter, FaultError
+
+
+class DivergenceError(FaultError):
+    """The post-epoch iterate is numerically broken (NaN/inf objective or
+    exploding optimality norm) — raised by the harness's divergence guard
+    and recovered like any other fault: abort to snapshot (plus eta
+    backoff, since divergence is usually a step-size problem)."""
 
 
 @dataclasses.dataclass
@@ -182,6 +215,102 @@ def option_mask(rng: np.random.Generator, m: int, option: str) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Failure semantics: recovery + checkpoint policies
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """Epoch-abort-to-snapshot recovery for the outer loop.
+
+    On any :class:`~repro.dist.FaultError` raised during an epoch (worker
+    crash, retries exhausted) or by the divergence guard, the harness
+    discards the failed epoch and reruns outer t from the snapshot
+    (w, z, s0) it already holds — SVRG's replicated outer state makes
+    this correct with no ad-hoc repair.  ``on_abort(backend)`` meters
+    whatever the abort path costs (the FD drivers default it to one
+    full-gradient redistribution under the ``"abort"`` kind); after
+    ``max_epoch_retries`` consecutive failed attempts of the same outer,
+    the fault propagates to the caller.
+    """
+
+    max_epoch_retries: int = 2  # reruns allowed per outer iteration
+    eta_backoff: float = 0.5  # eta scale multiplier on divergence
+    divergence_factor: float = 1e3  # obj > factor * |prev obj| => diverged
+    on_abort: Callable | None = None  # on_abort(backend): meter the abort
+
+    def __post_init__(self) -> None:
+        if self.max_epoch_retries < 0:
+            raise ValueError("max_epoch_retries >= 0 required")
+        if not 0.0 < self.eta_backoff <= 1.0:
+            raise ValueError("eta_backoff must be in (0, 1]")
+        if self.divergence_factor <= 1.0:
+            raise ValueError("divergence_factor > 1 required")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """Persist outer-loop state every ``every`` outers (and at the end).
+
+    One rolling checkpoint at ``<directory>/outer``: arrays (w, z, s0)
+    in the npz, everything else — outer index, eta scale, numpy rng
+    state, meter counters + event log, modeled time, history — in the
+    json sidecar's ``extra`` dict.  ``resume=True`` restores all of it
+    before the first epoch when the checkpoint exists (and starts fresh
+    when it does not, so a first run and a restart share one flag); the
+    resumed run is bit-identical to the uninterrupted one.
+    """
+
+    directory: str
+    every: int = 1
+    resume: bool = False
+
+    def __post_init__(self) -> None:
+        if not self.directory:
+            raise ValueError("CheckpointPolicy.directory must be non-empty")
+        if self.every < 1:
+            raise ValueError("CheckpointPolicy.every >= 1 required")
+
+    @property
+    def path(self) -> str:
+        return os.path.join(self.directory, "outer")
+
+    def exists(self) -> bool:
+        return os.path.exists(self.path + ".npz")
+
+
+_CKPT_VERSION = 1
+
+
+def _save_outer_state(
+    policy: CheckpointPolicy,
+    *,
+    w,
+    z_data,
+    s0,
+    outer_next: int,
+    eta_scale: float,
+    rng: np.random.Generator,
+    meter: CommMeter,
+    modeled_time_s: float,
+    history: list[OuterRecord],
+) -> None:
+    ckpt.save(
+        policy.path,
+        {"w": w, "z": z_data, "s0": s0},
+        extra={
+            "version": _CKPT_VERSION,
+            "outer_next": int(outer_next),
+            "eta_scale": float(eta_scale),
+            "rng_state": rng.bit_generator.state,
+            "meter": meter.state_dict(),
+            "modeled_time_s": float(modeled_time_s),
+            "history": [dataclasses.asdict(h) for h in history],
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
 
@@ -195,6 +324,8 @@ def run_outer_loop(
     epoch: Callable,
     evaluate: Callable,
     backend: Collectives | None = None,
+    recovery: RecoveryPolicy | None = None,
+    checkpoint: CheckpointPolicy | None = None,
 ) -> RunResult:
     """Run ``outer_iters`` outer iterations with snapshot rotation.
 
@@ -205,19 +336,89 @@ def run_outer_loop(
     from.  ``backend=None`` means no communication (the serial path):
     the history records zero scalars/rounds/modeled time against a fresh
     empty meter.
+
+    ``recovery`` arms epoch-abort-to-snapshot: the snapshot entering the
+    epoch is only rotated *after* the epoch and its evaluation succeed,
+    so a failed attempt retries from exactly the state it started with.
+    If the epoch hook accepts an ``eta_scale`` keyword, divergence
+    backoff is threaded through it (a retried epoch reruns with a
+    smaller step); hooks that don't accept it still get abort/retry.
+    ``checkpoint`` arms persistence/resume (see
+    :class:`CheckpointPolicy`).
     """
     rng = np.random.default_rng(seed)
     w = init_w
     meter = backend.meter if backend is not None else CommMeter()
     history: list[OuterRecord] = []
+    eta_scale = 1.0
+    start_outer = 0
+    accepts_scale = "eta_scale" in inspect.signature(epoch).parameters
     t_start = time.perf_counter()
     z_data, s0 = snapshot(w)  # outer-0 snapshot
-    for t in range(outer_iters):
-        w = epoch(t, rng, w, z_data, s0)
-        # Rotation: the post-epoch full gradient is next outer's snapshot
-        # and this record's diagnostic pair (z and w at the SAME iterate).
-        z_data, s0 = snapshot(w)
-        obj, gnorm = evaluate(w, z_data, s0)
+    if checkpoint is not None and checkpoint.resume and checkpoint.exists():
+        state = ckpt.restore(
+            checkpoint.path, {"w": w, "z": z_data, "s0": s0}
+        )
+        extra = ckpt.load_meta(checkpoint.path)["extra"]
+        w, z_data, s0 = state["w"], state["z"], state["s0"]
+        rng.bit_generator.state = extra["rng_state"]
+        meter.load_state(extra["meter"])
+        if backend is not None:
+            # 0.0 + x == x bitwise, and modeled time accumulates left to
+            # right, so re-charging the saved prefix then continuing is
+            # exactly the uninterrupted sum.
+            backend.charge_seconds(extra["modeled_time_s"])
+        eta_scale = float(extra["eta_scale"])
+        start_outer = int(extra["outer_next"])
+        history = [OuterRecord(**h) for h in extra["history"]]
+        if history:
+            t_start = time.perf_counter() - history[-1].wall_time_s
+    prev_obj: float | None = None
+    for t in range(start_outer, outer_iters):
+        attempts = 0
+        while True:
+            begin_outer = getattr(backend, "begin_outer", None)
+            if begin_outer is not None:
+                begin_outer(t)
+            try:
+                if accepts_scale:
+                    w_new = epoch(t, rng, w, z_data, s0, eta_scale=eta_scale)
+                else:
+                    w_new = epoch(t, rng, w, z_data, s0)
+                # Rotation: the post-epoch full gradient is next outer's
+                # snapshot and this record's diagnostic pair (z and w at
+                # the SAME iterate).
+                z_new, s0_new = snapshot(w_new)
+                obj, gnorm = evaluate(w_new, z_new, s0_new)
+                if recovery is not None:
+                    floor = max(abs(prev_obj), 1.0) if prev_obj is not None \
+                        else None
+                    if not (np.isfinite(obj) and np.isfinite(gnorm)):
+                        raise DivergenceError(
+                            f"outer {t}: non-finite objective/optimality "
+                            f"(obj={obj}, norm={gnorm})"
+                        )
+                    if floor is not None and \
+                            obj > recovery.divergence_factor * floor:
+                        raise DivergenceError(
+                            f"outer {t}: objective exploded "
+                            f"({obj:.3e} > {recovery.divergence_factor:g} * "
+                            f"{floor:.3e})"
+                        )
+                break
+            except FaultError as err:
+                if recovery is None or attempts >= recovery.max_epoch_retries:
+                    raise
+                attempts += 1
+                if isinstance(err, DivergenceError):
+                    eta_scale *= recovery.eta_backoff
+                if recovery.on_abort is not None and backend is not None:
+                    recovery.on_abort(backend)
+                # Retry from the snapshot: w/z_data/s0 were never rotated,
+                # so the failed epoch leaves no trace in the trajectory —
+                # only in the meter (retries, aborts) and modeled time.
+        w, z_data, s0 = w_new, z_new, s0_new
+        prev_obj = obj
         history.append(
             OuterRecord(
                 t,
@@ -229,4 +430,21 @@ def run_outer_loop(
                 time.perf_counter() - t_start,
             )
         )
+        if checkpoint is not None and (
+            (t + 1) % checkpoint.every == 0 or t == outer_iters - 1
+        ):
+            _save_outer_state(
+                checkpoint,
+                w=w,
+                z_data=z_data,
+                s0=s0,
+                outer_next=t + 1,
+                eta_scale=eta_scale,
+                rng=rng,
+                meter=meter,
+                modeled_time_s=(
+                    backend.modeled_time_s if backend is not None else 0.0
+                ),
+                history=history,
+            )
     return RunResult(w=w, history=history, meter=meter)

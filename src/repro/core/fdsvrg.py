@@ -50,7 +50,9 @@ import jax.numpy as jnp
 
 from repro.core import losses as losses_lib
 from repro.core.driver import (
+    CheckpointPolicy,
     OuterRecord,
+    RecoveryPolicy,
     RunResult,
     draw_samples,
     make_same_iterate_eval,
@@ -171,6 +173,31 @@ def _full_grad_blocks(
     ]
     z_data = jnp.concatenate(z_blocks) if q > 1 else z_blocks[0]
     return z_data, s0
+
+
+def _default_fd_abort(n: int, nnz: int, q: int):
+    """The default ``RecoveryPolicy.on_abort`` for the FD drivers: an
+    epoch abort re-establishes the snapshot on the restarted worker —
+    one extra full-gradient phase, metered under its own ``"abort"``
+    kind so honest-accounting tests can separate it from the schedule."""
+    from repro.dist import tree_rounds
+
+    def on_abort(backend):
+        if backend.q > 1:
+            backend.p2p(2 * backend.q * n, "abort", rounds=tree_rounds(backend.q))
+        backend.charge_cost(COSTS.fd_fullgrad(n=n, nnz=nnz, q=q))
+
+    return on_abort
+
+
+def _with_default_abort(
+    recovery: RecoveryPolicy | None, n: int, nnz: int, q: int
+) -> RecoveryPolicy | None:
+    if recovery is None or recovery.on_abort is not None:
+        return recovery
+    return dataclasses.replace(
+        recovery, on_abort=_default_fd_abort(n, nnz, q)
+    )
 
 
 def _kernel_lams(
@@ -570,6 +597,8 @@ def run_serial_svrg(
     use_kernels: bool = False,
     init_w: jax.Array | None = None,
     lazy_updates: str | None = None,
+    recovery: RecoveryPolicy | None = None,
+    checkpoint: CheckpointPolicy | None = None,
 ) -> RunResult:
     _check_lazy(lazy_updates)
     # The q=1 BlockCSR shares the PaddedCSR arrays (local ids == global).
@@ -586,7 +615,11 @@ def run_serial_svrg(
             loss.name, block_dims, use_kernels,
         )
 
-    def epoch(t, rng, w, z_data, s0):
+    def epoch(t, rng, w, z_data, s0, eta_scale=1.0):
+        # eta stays a traced operand, so divergence backoff (eta_scale
+        # < 1) reuses the compiled scan; eta * 1.0 is bit-exact on the
+        # default path.
+        eta = cfg.eta * eta_scale
         samples = draw_samples(rng, data.num_instances, cfg.inner_steps,
                                cfg.batch_size)
         mask = option_mask(rng, cfg.inner_steps, cfg.option)
@@ -594,7 +627,7 @@ def run_serial_svrg(
             return _lazy_inner_epoch(
                 block_data.indices, block_data.values, data.labels,
                 w, z_data, s0,
-                jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
+                jnp.asarray(samples), eta, jnp.asarray(mask),
                 corrections, loss.name, reg.name, reg.lam, block_dims,
                 use_kernels, lazy_updates, lam2=reg.lam2,
                 kernel_lams=kernel_lams,
@@ -602,7 +635,7 @@ def run_serial_svrg(
         return _inner_epoch(
             block_data.indices, block_data.values, data.labels,
             w, z_data, s0,
-            jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
+            jnp.asarray(samples), eta, jnp.asarray(mask),
             loss.name, reg.name, reg.lam, block_dims, use_kernels,
             lam2=reg.lam2, kernel_lams=kernel_lams,
         )
@@ -614,6 +647,8 @@ def run_serial_svrg(
         snapshot=snapshot,
         epoch=epoch,
         evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
+        recovery=recovery,
+        checkpoint=checkpoint,
     )
 
 
@@ -635,6 +670,8 @@ def run_fdsvrg(
     block_data: BlockCSR | None = None,
     init_w: jax.Array | None = None,
     lazy_updates: str | None = None,
+    recovery: RecoveryPolicy | None = None,
+    checkpoint: CheckpointPolicy | None = None,
 ) -> RunResult:
     """Algorithm 1 with q = partition.num_blocks feature-sharded workers.
 
@@ -678,19 +715,20 @@ def run_fdsvrg(
             loss.name, block_dims, use_kernels,
         )
 
-    def epoch(t, rng, w, z_data, s0):
+    def epoch(t, rng, w, z_data, s0, eta_scale=1.0):
         # --- full-gradient phase (Alg 1 lines 3-5): account the snapshot
         # gradient this outer iteration consumes ---
         backend.meter_tree(payload=n)
         backend.charge_cost(COSTS.fd_fullgrad(n=n, nnz=nnz, q=q))
 
+        eta = cfg.eta * eta_scale  # traced; bit-exact when eta_scale == 1
         samples = draw_samples(rng, n, cfg.inner_steps, u)
         mask = option_mask(rng, cfg.inner_steps, cfg.option)
         if lazy_updates is not None:
             w = _lazy_inner_epoch(
                 block_data.indices, block_data.values, data.labels,
                 w, z_data, s0,
-                jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
+                jnp.asarray(samples), eta, jnp.asarray(mask),
                 corrections, loss.name, reg.name, reg.lam, block_dims,
                 use_kernels, lazy_updates, lam2=reg.lam2,
                 kernel_lams=kernel_lams,
@@ -699,7 +737,7 @@ def run_fdsvrg(
             w = _inner_epoch(
                 block_data.indices, block_data.values, data.labels,
                 w, z_data, s0,
-                jnp.asarray(samples), cfg.eta, jnp.asarray(mask),
+                jnp.asarray(samples), eta, jnp.asarray(mask),
                 loss.name, reg.name, reg.lam, block_dims, use_kernels,
                 lam2=reg.lam2, kernel_lams=kernel_lams,
             )
@@ -719,6 +757,8 @@ def run_fdsvrg(
         epoch=epoch,
         evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
         backend=backend,
+        recovery=_with_default_abort(recovery, n, nnz, q),
+        checkpoint=checkpoint,
     )
 
 
@@ -819,6 +859,8 @@ def fdsvrg_worker_simulation(
     block_data: BlockCSR | None = None,
     init_w: jax.Array | None = None,
     lazy_updates: str | None = None,
+    recovery: RecoveryPolicy | None = None,
+    checkpoint: CheckpointPolicy | None = None,
 ) -> RunResult:
     """Object-level Algorithm 1: a list of per-worker states; every
     inner-loop cross-worker scalar passes through ``backend.all_reduce``
@@ -885,14 +927,15 @@ def fdsvrg_worker_simulation(
         else None
     )
 
-    def epoch(t, rng, w, z_data, s0):
+    def epoch(t, rng, w, z_data, s0, eta_scale=1.0):
         # Account the full-gradient tree this outer consumed (lines 3-4).
         backend.meter_tree(payload=n)
+        eta_eff = cfg.eta * eta_scale  # bit-exact when eta_scale == 1
         blocks = split(w)
         z_blocks = split(z_data)
         samples = draw_samples(rng, n, cfg.inner_steps, cfg.batch_size)
         mask = option_mask(rng, cfg.inner_steps, cfg.option)
-        eta_full = jnp.asarray(cfg.eta, dtype=blocks[0].dtype)
+        eta_full = jnp.asarray(eta_eff, dtype=blocks[0].dtype)
         stop = jnp.asarray(int(jnp.asarray(mask).sum()), dtype=jnp.int32)
         lasts = [
             jnp.zeros((block_dims[l],), dtype=jnp.int32) for l in range(q)
@@ -922,7 +965,7 @@ def fdsvrg_worker_simulation(
             s_m = backend.all_reduce(partial_m, payload=cfg.batch_size)
             s_a = s0[ids]
             coef = (loss.dvalue(s_m, y) - loss.dvalue(s_a, y)) / cfg.batch_size
-            eta_m = jnp.asarray(cfg.eta * float(mask[m]), dtype=blocks[0].dtype)
+            eta_m = jnp.asarray(eta_eff * float(mask[m]), dtype=blocks[0].dtype)
             # Line 11: purely local prox update on each block (the prox is
             # elementwise — paper eq. 3 — so no worker needs its peers).
             for l in range(q):
@@ -959,4 +1002,8 @@ def fdsvrg_worker_simulation(
         epoch=epoch,
         evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
         backend=backend,
+        recovery=_with_default_abort(
+            recovery, n, data.nnz_max, q
+        ),
+        checkpoint=checkpoint,
     )

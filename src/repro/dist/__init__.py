@@ -20,6 +20,10 @@ models crossing) a worker boundary:
   communication report benchmarks consume.
 * :mod:`repro.dist.compat`       — version-portable wrappers for the jax
   APIs (``shard_map``, ``make_mesh``) that moved between jax releases.
+* :mod:`repro.dist.faults`       — seeded fault injection at the
+  collective boundary: ``FaultPlan`` / ``RetryPolicy`` /
+  ``FaultyBackend``, with retransmissions metered under the ``retry``
+  kind so comm accounting stays honest under failure.
 
 Every optimization method in :mod:`repro.core` (FD-SVRG, DSVRG, the
 parameter-server baselines) takes a ``Collectives`` backend and routes
@@ -34,6 +38,14 @@ from repro.dist.collectives import (
 )
 from repro.dist.compat import make_mesh, shard_map
 from repro.dist.costs import COSTS, CostModel, PhaseCost
+from repro.dist.faults import (
+    FaultError,
+    FaultPlan,
+    FaultyBackend,
+    RetriesExhaustedError,
+    RetryPolicy,
+    WorkerCrashError,
+)
 from repro.dist.meter import (
     ClusterModel,
     CommEvent,
@@ -60,11 +72,17 @@ __all__ = [
     "CommMeter",
     "CommReport",
     "CostModel",
+    "FaultError",
+    "FaultPlan",
+    "FaultyBackend",
     "PhaseCost",
     "LocalBackend",
+    "RetriesExhaustedError",
+    "RetryPolicy",
     "ShardMapBackend",
     "SimBackend",
     "TpuV5eModel",
+    "WorkerCrashError",
     "broadcast_schedule",
     "collective_permute_tree",
     "make_mesh",

@@ -81,6 +81,28 @@ class CommMeter:
             **{f"kind:{k}": v for k, v in sorted(self.by_kind.items())},
         }
 
+    # -- checkpoint support ----------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-serializable full state (counters AND the event log), so a
+        resumed run's meter is indistinguishable from an uninterrupted one."""
+        return {
+            "total_scalars": self.total_scalars,
+            "total_rounds": self.total_rounds,
+            "by_kind": dict(self.by_kind),
+            "events": [[e.kind, e.scalars, e.rounds] for e in self.events],
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.total_scalars = int(state["total_scalars"])
+        self.total_rounds = int(state["total_rounds"])
+        self.by_kind = defaultdict(int)
+        for k, v in state["by_kind"].items():
+            self.by_kind[k] = int(v)
+        self.events = [
+            CommEvent(str(k), int(s), int(r)) for k, s, r in state["events"]
+        ]
+
 
 @dataclasses.dataclass(frozen=True)
 class ClusterModel:

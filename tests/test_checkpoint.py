@@ -48,6 +48,71 @@ def test_restore_shape_mismatch_raises(tmp_path):
         pass
 
 
+def test_restore_validates_leaf_shape(tmp_path):
+    import pytest
+
+    path = os.path.join(tmp_path, "ck_shape")
+    ckpt.save(path, {"a": jnp.ones((3, 2))})
+    with pytest.raises(ValueError, match=r"shape .*template wants"):
+        ckpt.restore(path, {"a": jnp.ones((2, 3))})
+
+
+def test_restore_validates_leaf_dtype(tmp_path):
+    import pytest
+
+    path = os.path.join(tmp_path, "ck_dtype")
+    ckpt.save(path, {"a": jnp.ones(4, dtype=jnp.float32)})
+    with pytest.raises(ValueError, match=r"dtype .*template wants"):
+        ckpt.restore(path, {"a": jnp.ones(4, dtype=jnp.int32)})
+
+
+def test_restore_validates_tree_keys(tmp_path):
+    import pytest
+
+    path = os.path.join(tmp_path, "ck_keys")
+    ckpt.save(path, {"a": jnp.ones(2), "b": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="tree structure mismatch"):
+        ckpt.restore(path, {"a": jnp.ones(2), "c": jnp.zeros(2)})
+
+
+def test_roundtrip_non_float_dtypes(tmp_path):
+    """The outer-loop checkpoint state carries int counters and bool
+    masks; they must round-trip without a float detour."""
+    state = {
+        "counters": jnp.asarray([3, 0, 7], dtype=jnp.int32),
+        "mask": jnp.asarray([True, False, True]),
+        "step": np.int64(41),
+    }
+    path = os.path.join(tmp_path, "ck_nf")
+    ckpt.save(path, state)
+    out = ckpt.restore(
+        path,
+        {
+            "counters": jnp.zeros(3, dtype=jnp.int32),
+            "mask": jnp.zeros(3, dtype=bool),
+            "step": np.int64(0),
+        },
+    )
+    assert out["counters"].dtype == jnp.int32
+    assert out["mask"].dtype == jnp.bool_
+    np.testing.assert_array_equal(np.asarray(out["counters"]), [3, 0, 7])
+    np.testing.assert_array_equal(np.asarray(out["mask"]), [True, False, True])
+    assert int(out["step"]) == 41
+
+
+def test_save_extra_meta_roundtrip(tmp_path):
+    """The json sidecar carries non-array state (rng state, meter
+    counters) exactly — including ints wider than 64 bits (PCG64)."""
+    big = 2**127 + 11
+    extra = {"outer_next": 5, "rng_state": {"state": big}, "time_s": 0.1 + 0.2}
+    path = os.path.join(tmp_path, "ck_extra")
+    ckpt.save(path, {"w": jnp.ones(2)}, extra=extra)
+    meta = ckpt.load_meta(path)
+    assert meta["extra"]["outer_next"] == 5
+    assert meta["extra"]["rng_state"]["state"] == big
+    assert meta["extra"]["time_s"] == 0.1 + 0.2  # float round-trip is exact
+
+
 def test_training_resumes_bitwise(tmp_path):
     """step -> save -> restore -> step  ==  step -> step."""
     from repro.data.pipeline import PipelineConfig, batches

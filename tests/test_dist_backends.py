@@ -5,6 +5,11 @@ interchangeable — same iterates (bit-for-bit, thanks to the shared
 canonical tree-order summation), same metered traffic (the §4.5 closed
 forms live in ONE place) — so any method ported onto the substrate can be
 compared across backends and against any other method on the same meter.
+
+The ``faulty-*`` kinds run the SAME equivalence suite through a
+:class:`repro.dist.FaultyBackend` wrapping each backend with a no-fault
+:class:`repro.dist.FaultPlan`: with no faults armed the wrapper must be
+a true no-op — bit-identical iterates and scalar-identical meters.
 """
 
 import jax.numpy as jnp
@@ -18,6 +23,8 @@ from repro.dist import (
     ClusterModel,
     Collectives,
     CommReport,
+    FaultPlan,
+    FaultyBackend,
     LocalBackend,
     ShardMapBackend,
     SimBackend,
@@ -31,6 +38,10 @@ Q = 4
 
 
 def make_backend(kind: str, q: int = Q) -> Collectives:
+    if kind.startswith("faulty-"):
+        # the wrapper with nothing armed: must behave as its inner backend
+        return FaultyBackend(make_backend(kind[len("faulty-"):], q),
+                             FaultPlan())
     if kind == "local":
         return LocalBackend(q)
     if kind == "sim":
@@ -41,6 +52,7 @@ def make_backend(kind: str, q: int = Q) -> Collectives:
 
 
 BACKENDS = ["local", "sim", "shardmap-interpret"]
+BACKENDS += [f"faulty-{k}" for k in BACKENDS]
 
 
 @pytest.fixture(scope="module")

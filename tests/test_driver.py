@@ -331,3 +331,53 @@ def test_run_method_plumbs_use_kernels(data, method):
                             use_kernels=True)
     np.testing.assert_array_equal(np.asarray(ref.w), np.asarray(ker.w))
     assert ref.meter.total_scalars == ker.meter.total_scalars
+
+
+# ---------------------------------------------------------------------------
+# 4. honest accounting under faults: the drift guard, faulted
+# ---------------------------------------------------------------------------
+
+
+def test_faulty_meter_is_analytic_schedule_plus_exact_retries(data):
+    """Under a drop-fault plan the meter stays falsifiable: the delivered
+    traffic equals the fault-free analytic schedule EXACTLY (same closed
+    form as the clean drift guard), and the total exceeds it by exactly
+    the retransmitted bytes recorded under the ``"retry"`` kind — which
+    an independent replay of the same seeded plan over the driver's
+    metering call sequence reproduces scalar-for-scalar."""
+    from benchmarks.common import analytic_outer
+    from repro.dist import FaultPlan, FaultyBackend, RetryPolicy, SimBackend
+
+    q, u, outers = 4, 2, 2
+    n = data.num_instances
+    cluster = ClusterModel()
+    cfg = SVRGConfig(eta=0.2, inner_steps=n // u, outer_iters=outers,
+                     batch_size=u)
+    plan = FaultPlan(seed=5, drop_prob=0.2)
+    retry = RetryPolicy(max_retries=8)
+    backend = FaultyBackend(SimBackend(q, cluster), plan, retry)
+    res = run_fdsvrg(data, balanced(data.dim, q), LOSS, REG, cfg,
+                     backend=backend)
+
+    _, c1 = analytic_outer("fdsvrg", _spec_of(data), q, u=u, cluster=cluster)
+    m = res.meter
+    # delivered collectives: the fault-free schedule, untouched
+    assert m.by_kind["tree_reduce"] == outers * c1
+    # retransmissions: present, and the only thing added to the total
+    retries = m.by_kind["retry"]
+    assert retries > 0
+    assert m.total_scalars == outers * c1 + retries
+
+    # independent replay: same plan + policy over the jitted driver's
+    # metering sequence (per outer: one N-payload tree, then M u-trees)
+    replay = FaultyBackend(SimBackend(q, cluster), plan, retry)
+    for _ in range(outers):
+        replay.meter_tree(payload=n)
+        replay.meter_tree(payload=u, steps=cfg.inner_steps)
+    assert replay.meter.by_kind["retry"] == retries
+
+    # drops retransmit deterministic partials: the trajectory cannot move
+    clean = run_fdsvrg(data, balanced(data.dim, q), LOSS, REG, cfg, cluster)
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(clean.w))
+    assert [h.objective for h in res.history] == \
+        [h.objective for h in clean.history]

@@ -1,0 +1,406 @@
+"""Fault injection, recovery semantics, and checkpoint/resume.
+
+Three layers under test:
+
+1. **The wrapper** (`repro.dist.faults`): seeded fault draws, the retry
+   loop's honest metering (failed attempts under the ``"retry"`` kind,
+   timeout+backoff on the modeled clock), crash arming, q<=1 immunity.
+2. **The harness** (`repro.core.driver`): epoch-abort-to-snapshot on any
+   FaultError, the divergence guard's eta backoff, abort metering via
+   ``RecoveryPolicy.on_abort``, retry exhaustion.
+3. **Checkpoint/resume**: a run interrupted at any checkpoint boundary
+   and resumed is BIT-identical to the uninterrupted run — iterates,
+   objectives, meter counters, and modeled time all exactly equal —
+   across the serial, jitted-FD, and worker-simulation drivers, with and
+   without the pallas kernels, and through the ``repro.api`` front door.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import losses
+from repro.core.driver import (
+    CheckpointPolicy,
+    DivergenceError,
+    RecoveryPolicy,
+    run_outer_loop,
+)
+from repro.core.fdsvrg import (
+    SVRGConfig,
+    fdsvrg_worker_simulation,
+    run_fdsvrg,
+    run_serial_svrg,
+)
+from repro.core.partition import balanced
+from repro.data.synthetic import make_sparse_classification
+from repro.dist import (
+    FaultPlan,
+    FaultyBackend,
+    RetriesExhaustedError,
+    RetryPolicy,
+    SimBackend,
+    WorkerCrashError,
+)
+
+LOSS = losses.logistic
+REG = losses.l2(1e-3)
+Q = 4
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_sparse_classification(
+        dim=256, num_instances=48, nnz_per_instance=8, seed=2
+    )
+
+
+def _cfg(**kw) -> SVRGConfig:
+    base = dict(eta=0.3, inner_steps=8, outer_iters=3, seed=13, batch_size=2)
+    base.update(kw)
+    return SVRGConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# 1. the wrapper: plans, retries, crashes
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_validates_and_normalizes():
+    with pytest.raises(ValueError, match="drop_prob"):
+        FaultPlan(drop_prob=1.0)
+    with pytest.raises(ValueError, match="corrupt_prob"):
+        FaultPlan(corrupt_prob=-0.1)
+    with pytest.raises(ValueError, match="straggler_delay_s"):
+        FaultPlan(straggler_delay_s=-1.0)
+    assert FaultPlan().is_noop
+    plan = FaultPlan(crash_at_outer=1)  # stray int normalized
+    assert plan.crash_at_outer == (1,)
+    assert not plan.is_noop
+
+
+def test_retry_policy_backoff_and_validation():
+    rp = RetryPolicy(backoff_base_s=1e-3, backoff_factor=2.0, jitter=0.0)
+    assert rp.backoff_s(0, 0.7) == pytest.approx(1e-3)
+    assert rp.backoff_s(2, 0.7) == pytest.approx(4e-3)
+    jittered = RetryPolicy(backoff_base_s=1e-3, jitter=0.5)
+    assert jittered.backoff_s(0, 1.0) == pytest.approx(1.5e-3)
+    with pytest.raises(ValueError, match="max_retries"):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match=">= 0"):
+        RetryPolicy(timeout_s=-0.1)
+
+
+def test_drop_meters_retry_kind_and_charges_time():
+    b = FaultyBackend(
+        SimBackend(Q), FaultPlan(seed=0, drop_prob=0.9),
+        RetryPolicy(max_retries=64, timeout_s=0.01),
+    )
+    clean = SimBackend(Q)
+    clean.meter_tree(payload=5)
+    b.meter_tree(payload=5)
+    m = b.meter
+    # the delivered collective is metered exactly as the clean one...
+    assert m.by_kind["tree_reduce"] == clean.meter.by_kind["tree_reduce"]
+    # ...each failed attempt retransmits the SAME 2qp scalars under
+    # "retry" (drop_prob=.9 over this seed fires at least once)...
+    retry = m.by_kind["retry"]
+    assert retry > 0 and retry % (2 * Q * 5) == 0
+    assert m.total_scalars == clean.meter.total_scalars + retry
+    # ...and every failed attempt's timeout+backoff hit the modeled clock
+    assert b.modeled_time_s > clean.modeled_time_s
+
+
+def test_retries_exhausted_raises_fault():
+    b = FaultyBackend(
+        SimBackend(Q), FaultPlan(seed=0, drop_prob=0.99),
+        RetryPolicy(max_retries=0),
+    )
+    with pytest.raises(RetriesExhaustedError, match="consecutive"):
+        b.meter_tree(payload=3)
+
+
+def test_straggler_below_timeout_charges_delay_only():
+    b = FaultyBackend(
+        SimBackend(Q),
+        FaultPlan(seed=1, straggler_prob=0.99, straggler_delay_s=1e-3),
+        RetryPolicy(timeout_s=0.1),
+    )
+    clean = SimBackend(Q)
+    clean.meter_tree(payload=5)
+    b.meter_tree(payload=5)
+    # slow but delivered: no retransmission, just a slower clock
+    assert "retry" not in b.meter.by_kind
+    assert b.meter.total_scalars == clean.meter.total_scalars
+    assert b.modeled_time_s > clean.modeled_time_s
+
+
+def test_straggler_beyond_timeout_is_a_drop():
+    # a 10s stall against a 1ms timeout: every attempt times out
+    b = FaultyBackend(
+        SimBackend(Q),
+        FaultPlan(seed=1, straggler_prob=0.99, straggler_delay_s=10.0),
+        RetryPolicy(max_retries=1, timeout_s=1e-3),
+    )
+    with pytest.raises(RetriesExhaustedError):
+        b.meter_tree(payload=3)
+    assert b.meter.by_kind["retry"] == 2 * (2 * Q * 3)  # both attempts
+
+
+def test_q1_faults_never_fire():
+    b = FaultyBackend(
+        SimBackend(1), FaultPlan(seed=0, drop_prob=0.9),
+        RetryPolicy(max_retries=0),
+    )
+    b.meter_tree(payload=5)  # would exhaust retries if the fault path ran
+    out = b.all_reduce([jnp.ones(3)])
+    np.testing.assert_array_equal(np.asarray(out), np.ones(3))
+    assert b.meter.total_scalars == 0
+
+
+def test_corruption_poisons_the_reduced_payload():
+    b = FaultyBackend(SimBackend(Q), FaultPlan(seed=3, corrupt_prob=0.99))
+    out = np.asarray(b.all_reduce([jnp.ones(4) for _ in range(Q)]))
+    assert np.isnan(out[0])
+    assert np.isfinite(out[1:]).all()
+    # metered like a clean collective: corruption is silent on the wire
+    assert b.meter.by_kind == {"tree_reduce": 2 * Q * 4}
+
+
+def test_crash_arms_per_outer_and_fires_once():
+    b = FaultyBackend(SimBackend(Q), FaultPlan(crash_at_outer=(1,)))
+    b.begin_outer(0)
+    b.meter_tree(payload=2)  # outer 0: no crash armed
+    b.begin_outer(1)
+    with pytest.raises(WorkerCrashError, match="outer iteration 1"):
+        b.meter_tree(payload=2)
+    b.begin_outer(1)  # the restarted attempt must not re-crash
+    b.meter_tree(payload=2)
+
+
+# ---------------------------------------------------------------------------
+# 2. the harness: abort-to-snapshot, divergence guard, eta backoff
+# ---------------------------------------------------------------------------
+
+
+def test_crash_without_recovery_propagates(data):
+    b = FaultyBackend(SimBackend(Q), FaultPlan(crash_at_outer=(1,)))
+    with pytest.raises(WorkerCrashError):
+        run_fdsvrg(data, balanced(data.dim, Q), LOSS, REG, _cfg(), backend=b)
+
+
+def test_crash_recovery_matches_the_clean_run(data):
+    """The crash fires at the epoch's first collective — before the
+    epoch's sample draw — so the retried epoch replays the same samples
+    and the recovered trajectory is bitwise the clean one; the recovery's
+    only trace is the metered abort re-distribution and its time."""
+    part = balanced(data.dim, Q)
+    clean = run_fdsvrg(data, part, LOSS, REG, _cfg(), backend=SimBackend(Q))
+    b = FaultyBackend(SimBackend(Q), FaultPlan(crash_at_outer=(1,)))
+    res = run_fdsvrg(data, part, LOSS, REG, _cfg(), backend=b,
+                     recovery=RecoveryPolicy())
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(clean.w))
+    assert [h.objective for h in res.history] == \
+        [h.objective for h in clean.history]
+    # one abort: one full-gradient re-broadcast (2*q*N scalars)
+    assert res.meter.by_kind["abort"] == 2 * Q * data.num_instances
+    assert res.meter.total_scalars == \
+        clean.meter.total_scalars + res.meter.by_kind["abort"]
+
+
+@pytest.mark.chaos
+def test_corruption_recovers_via_epoch_abort(data):
+    plan = FaultPlan(seed=23, corrupt_prob=0.05)
+    b = FaultyBackend(SimBackend(Q), plan, RetryPolicy())
+    res = fdsvrg_worker_simulation(
+        data, balanced(data.dim, Q), LOSS, REG, _cfg(), backend=b,
+        recovery=RecoveryPolicy(max_epoch_retries=4, eta_backoff=1.0),
+    )
+    assert np.isfinite(res.final_objective())
+    assert np.isfinite(np.asarray(res.w)).all()
+    # this seed does poison a payload: the divergence guard aborted
+    assert res.meter.by_kind["abort"] > 0
+
+
+def test_divergence_guard_backs_off_eta_and_restores_snapshot():
+    seen = []
+
+    def epoch(t, rng, w, z, s0, eta_scale=1.0):
+        seen.append(eta_scale)
+        return w + eta_scale
+
+    def snapshot(w):
+        return w, w
+
+    def evaluate(w, z, s0):
+        # the first attempt of outer 0 "diverges"; every retry is finite
+        obj = float("nan") if len(seen) == 1 else float(np.asarray(w)[0])
+        return obj, 1.0
+
+    res = run_outer_loop(
+        outer_iters=2, seed=0, init_w=jnp.zeros(2),
+        snapshot=snapshot, epoch=epoch, evaluate=evaluate,
+        recovery=RecoveryPolicy(max_epoch_retries=1, eta_backoff=0.5),
+    )
+    # retry at halved eta; the smaller step persists into outer 1
+    assert seen == [1.0, 0.5, 0.5]
+    # the failed attempt left no trace: w restarted from the snapshot
+    np.testing.assert_array_equal(np.asarray(res.w), np.full(2, 1.0))
+
+
+def test_recovery_exhaustion_reraises_and_meters_each_abort():
+    aborts = []
+
+    def epoch(t, rng, w, z, s0):
+        return w
+
+    def snapshot(w):
+        return w, w
+
+    def evaluate(w, z, s0):
+        return float("nan"), 1.0  # never recovers
+
+    with pytest.raises(DivergenceError, match="non-finite"):
+        run_outer_loop(
+            outer_iters=1, seed=0, init_w=jnp.zeros(2),
+            snapshot=snapshot, epoch=epoch, evaluate=evaluate,
+            backend=SimBackend(Q),
+            recovery=RecoveryPolicy(
+                max_epoch_retries=2, on_abort=lambda b: aborts.append(b.q)
+            ),
+        )
+    assert aborts == [Q, Q]  # one abort per retried attempt
+
+
+def test_objective_explosion_trips_the_guard():
+    def epoch(t, rng, w, z, s0):
+        return w + 1.0
+
+    def snapshot(w):
+        return w, w
+
+    def evaluate(w, z, s0):
+        # finite but exploding: 1.0 then 1e9
+        return float(np.asarray(w)[0]) ** 9 + 1.0, 1.0
+
+    with pytest.raises(DivergenceError, match="exploded"):
+        run_outer_loop(
+            outer_iters=3, seed=0, init_w=jnp.ones(1),
+            snapshot=snapshot, epoch=epoch, evaluate=evaluate,
+            recovery=RecoveryPolicy(max_epoch_retries=0,
+                                    divergence_factor=10.0),
+        )
+
+
+# ---------------------------------------------------------------------------
+# 3. checkpoint/resume bit-identity
+# ---------------------------------------------------------------------------
+
+
+def _run_driver(method, data, cfg, use_kernels, checkpoint=None):
+    if method == "serial":
+        return run_serial_svrg(data, LOSS, REG, cfg,
+                               use_kernels=use_kernels, checkpoint=checkpoint)
+    part = balanced(data.dim, Q)
+    if method == "fdsvrg":
+        return run_fdsvrg(data, part, LOSS, REG, cfg, backend=SimBackend(Q),
+                          use_kernels=use_kernels, checkpoint=checkpoint)
+    return fdsvrg_worker_simulation(
+        data, part, LOSS, REG, cfg, backend=SimBackend(Q),
+        use_kernels=use_kernels, checkpoint=checkpoint,
+    )
+
+
+def _assert_identical_runs(res, ref):
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(ref.w))
+    for a, b in zip(res.history, ref.history):
+        assert a.outer == b.outer
+        assert a.objective == b.objective  # exact, not approx
+        assert a.grad_norm == b.grad_norm
+        assert a.comm_scalars == b.comm_scalars
+        assert a.comm_rounds == b.comm_rounds
+        assert a.modeled_time_s == b.modeled_time_s
+    assert res.meter.state_dict() == ref.meter.state_dict()
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+@pytest.mark.parametrize("method", ["serial", "fdsvrg", "fdsvrg_sim"])
+def test_resume_is_bit_identical(tmp_path, data, method, use_kernels):
+    """Interrupt at outer 2 of 4, resume to completion: iterates,
+    objectives, meter counters, and modeled time exactly equal the
+    uninterrupted run's — every driver, both kernel settings."""
+    full, half = _cfg(outer_iters=4), _cfg(outer_iters=2)
+    ref = _run_driver(method, data, full, use_kernels)
+    ckdir = str(tmp_path / method)
+    _run_driver(method, data, half, use_kernels,
+                checkpoint=CheckpointPolicy(directory=ckdir, every=2))
+    res = _run_driver(method, data, full, use_kernels,
+                      checkpoint=CheckpointPolicy(directory=ckdir, every=2,
+                                                  resume=True))
+    assert res.history[0].outer == 0  # resumed history includes the prefix
+    _assert_identical_runs(res, ref)
+
+
+def test_resume_flag_with_no_checkpoint_starts_fresh(tmp_path, data):
+    """resume=True against an empty directory is a first run, not an
+    error — one flag serves both the first launch and every restart."""
+    policy = CheckpointPolicy(directory=str(tmp_path / "empty"), resume=True)
+    ref = _run_driver("fdsvrg", data, _cfg(), False)
+    res = _run_driver("fdsvrg", data, _cfg(), False, checkpoint=policy)
+    _assert_identical_runs(res, ref)
+
+
+def test_resume_after_faulty_run_replays_recovery_state(tmp_path, data):
+    """A checkpoint taken AFTER a recovered crash carries the recovery's
+    meter (abort + schedule) and clock; resuming reproduces the faulty
+    run's final state exactly."""
+    part = balanced(data.dim, Q)
+    plan = FaultPlan(crash_at_outer=(1,))
+
+    def faulty_run(cfg, checkpoint=None):
+        b = FaultyBackend(SimBackend(Q), plan)
+        return run_fdsvrg(data, part, LOSS, REG, cfg, backend=b,
+                          recovery=RecoveryPolicy(), checkpoint=checkpoint)
+
+    ref = faulty_run(_cfg(outer_iters=4))
+    ckdir = str(tmp_path / "faulty")
+    faulty_run(_cfg(outer_iters=2),
+               checkpoint=CheckpointPolicy(directory=ckdir))
+    # the resumed run is past outer 1: its wrapper's crash never fires
+    res = faulty_run(_cfg(outer_iters=4),
+                     checkpoint=CheckpointPolicy(directory=ckdir,
+                                                 resume=True))
+    _assert_identical_runs(res, ref)
+    assert res.meter.by_kind["abort"] == 2 * Q * data.num_instances
+
+
+# ---------------------------------------------------------------------------
+# the front door: spec / registry / estimator threading
+# ---------------------------------------------------------------------------
+
+
+def test_solve_checkpoint_resume_bit_identity(tmp_path, data):
+    from repro.api import ExperimentSpec, solve
+
+    base = dict(method="fdsvrg", data=data, q=Q, reg=REG, eta=0.3,
+                batch_size=2, inner_steps=8, seed=5)
+    ref = solve(ExperimentSpec(**base, outer_iters=4))
+    ckdir = str(tmp_path / "api")
+    solve(ExperimentSpec(**base, outer_iters=2, checkpoint_dir=ckdir))
+    res = solve(ExperimentSpec(**base, outer_iters=4, checkpoint_dir=ckdir,
+                               resume=True))
+    _assert_identical_runs(res, ref)
+
+
+def test_spec_and_registry_validate_checkpointing(tmp_path, data):
+    from repro.api import ExperimentSpec, solve
+
+    with pytest.raises(ValueError, match="resume"):
+        ExperimentSpec(method="fdsvrg", data=data, reg=REG, resume=True)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        ExperimentSpec(method="fdsvrg", data=data, reg=REG,
+                       checkpoint_dir=str(tmp_path), checkpoint_every=0)
+    with pytest.raises(ValueError, match="checkpoint"):
+        solve(ExperimentSpec(method="dsvrg", data=data, reg=REG, q=Q,
+                             eta=0.1, inner_steps=8, outer_iters=1,
+                             checkpoint_dir=str(tmp_path)))
