@@ -1,0 +1,276 @@
+"""Out-of-core ingestion benchmark: streaming LibSVM -> per-worker
+BlockCSR slabs with the on-disk cache.
+
+What it measures and certifies (the numbers land in BENCH_ingest.json):
+
+* **throughput** — rows/s for the chunked parse+build
+  (:func:`repro.data.pipeline.stream_block_csr` over a
+  :class:`~repro.data.pipeline.LibSVMSource`) vs the one-shot
+  ``load_libsvm -> BlockCSR.from_padded`` path;
+* **bounded ingestion memory** — the tracemalloc python-heap peak during
+  the chunked build stays under an analytic budget of
+  ``output slabs + compacted strips + K chunks + slack``, i.e. transient
+  parse state is a constant number of chunks, never the padded file
+  (numpy data allocations are tracemalloc-visible; jax buffers are not,
+  so the build keeps everything numpy until the final device put);
+* **cache** — a cold ``get_or_build`` parses and writes slabs, the warm
+  re-run loads them back bitwise-equal without touching the parser;
+* **equality** — streamed-vs-oneshot bitwise equality, the pipeline's
+  hard contract, re-proven on the benchmark's own skewed-width data.
+
+Standalone entry point with a ``--quick`` smoke mode for CI:
+
+    PYTHONPATH=src python -m benchmarks.ingest_bench [--quick]
+
+writes results/benchmarks/ingest.csv and BENCH_ingest.json, and exits
+non-zero if any certified contract (equality, warm hit, memory budget)
+fails — CI treats a regression here as a build break.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+import time
+import tracemalloc
+
+import numpy as np
+
+from benchmarks.common import ensure_dir, write_bench_json, write_csv
+from repro.core.partition import balanced
+from repro.data.block_csr import BlockCSR
+from repro.data.libsvm import load_libsvm, write_libsvm
+from repro.data.ingest_cache import get_or_build
+from repro.data.pipeline import LibSVMSource, stream_block_csr
+from repro.data.sparse import PaddedCSR
+
+
+def _skewed_data(quick: bool) -> PaddedCSR:
+    """Text-shaped rows: mostly narrow, a few very wide — the regime
+    where chunked parsing matters (the global padded width is set by
+    rare outlier rows, so whole-file materialization is mostly padding).
+    """
+    if quick:
+        n, dim, nnz_common, nnz_wide, every = 2_000, 8_192, 4, 64, 250
+    else:
+        n, dim, nnz_common, nnz_wide, every = 30_000, 65_536, 6, 256, 500
+    rng = np.random.default_rng(7)
+    indices = np.zeros((n, nnz_wide), dtype=np.int32)
+    values = np.zeros((n, nnz_wide), dtype=np.float32)
+    for i in range(n):
+        k = nnz_wide if i % every == 0 else nnz_common
+        cols = rng.choice(dim, size=k, replace=False).astype(np.int32)
+        indices[i, :k] = cols
+        values[i, :k] = rng.normal(size=k).astype(np.float32)
+    labels = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    return PaddedCSR(
+        indices=indices, values=values, labels=labels, dim=dim
+    )
+
+
+def _blocks_equal(a: BlockCSR, b: BlockCSR) -> bool:
+    if a.partition.bounds != b.partition.bounds:
+        return False
+    if a.nnz_budgets != b.nnz_budgets:
+        return False
+    if not np.array_equal(np.asarray(a.labels), np.asarray(b.labels)):
+        return False
+    for l in range(a.num_blocks):
+        for fa, fb in (
+            (a.indices[l], b.indices[l]),
+            (a.values[l], b.values[l]),
+            (a.nnz_col[l], b.nnz_col[l]),
+        ):
+            if not np.array_equal(np.asarray(fa), np.asarray(fb)):
+                return False
+    return True
+
+
+def _slab_bytes(block: BlockCSR) -> int:
+    """Bytes the finished slabs occupy (indices + values + nnz_col)."""
+    total = 0
+    for l in range(block.num_blocks):
+        total += np.asarray(block.indices[l]).nbytes
+        total += np.asarray(block.values[l]).nbytes
+        total += np.asarray(block.nnz_col[l]).nbytes
+    return total + np.asarray(block.labels).nbytes
+
+
+def _memory_budget(block: BlockCSR, chunk_rows: int, nnz_wide: int) -> int:
+    """The analytic peak-heap bound the streamed build must respect.
+
+    * the output slabs themselves (padded, O(n));
+    * the compacted per-chunk strips the accumulators hold until
+      ``finalize`` — at most the slabs again;
+    * a constant number of in-flight chunk buffers: the packed numpy
+      chunk plus the row-of-python-lists parse state (~100 bytes per
+      stored entry is generous for boxed floats + list slots);
+    * fixed slack for interpreter noise.
+    """
+    slabs = _slab_bytes(block)
+    chunk_numpy = chunk_rows * nnz_wide * (4 + 4 + 8)
+    chunk_python = chunk_rows * nnz_wide * 100
+    return 2 * slabs + 4 * (chunk_numpy + chunk_python) + (16 << 20)
+
+
+def run(quick: bool = False):
+    q = 4
+    chunk_rows = 256 if quick else 1024
+    data = _skewed_data(quick)
+    nnz_wide = data.nnz_max
+    n = data.num_instances
+
+    workdir = tempfile.mkdtemp(prefix="ingest_bench_")
+    rows: list[list] = []
+    try:
+        path = os.path.join(workdir, "bench.libsvm")
+        t = time.perf_counter()
+        write_libsvm(path, data)
+        t_write = time.perf_counter() - t
+        file_mb = os.path.getsize(path) / 2**20
+        rows.append(["ingest_write_libsvm", f"{t_write * 1e6:.0f}",
+                     f"{file_mb:.1f}MB"])
+
+        # one-shot reference: whole file -> padded matrix -> slabs
+        t = time.perf_counter()
+        tracemalloc.start()
+        loaded = load_libsvm(path)
+        part = balanced(loaded.dim, q)
+        oneshot = BlockCSR.from_padded(loaded, part)
+        _, peak_oneshot = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        t_oneshot = time.perf_counter() - t
+        rows.append(["ingest_oneshot_build", f"{t_oneshot * 1e6:.0f}",
+                     f"{n / t_oneshot:.0f}rows/s "
+                     f"peak={peak_oneshot / 2**20:.1f}MB"])
+
+        # streamed build: bounded chunks, same bits out
+        source = LibSVMSource(path)
+        t = time.perf_counter()
+        tracemalloc.start()
+        streamed = stream_block_csr(source, part, chunk_rows=chunk_rows)
+        _, peak_streamed = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        t_streamed = time.perf_counter() - t
+        equal = _blocks_equal(streamed, oneshot)
+        budget = _memory_budget(streamed, chunk_rows, nnz_wide)
+        within = peak_streamed <= budget
+        rows.append(["ingest_streamed_build", f"{t_streamed * 1e6:.0f}",
+                     f"{n / t_streamed:.0f}rows/s chunk={chunk_rows} "
+                     f"peak={peak_streamed / 2**20:.1f}MB "
+                     f"budget={budget / 2**20:.1f}MB "
+                     f"equal={equal} within_budget={within}"])
+
+        # cache: cold writes slabs, warm skips the parser entirely
+        cache_dir = os.path.join(workdir, "cache")
+        t = time.perf_counter()
+        cold = get_or_build(LibSVMSource(path), part, cache_dir=cache_dir,
+                            chunk_rows=chunk_rows)
+        t_cold = time.perf_counter() - t
+        t = time.perf_counter()
+        warm = get_or_build(LibSVMSource(path), part, cache_dir=cache_dir,
+                            chunk_rows=chunk_rows)
+        t_warm = time.perf_counter() - t
+        warm_hit = (
+            cold.status == "cold"
+            and warm.status == "warm"
+            and _blocks_equal(cold.data, warm.data)
+        )
+        rows.append(["ingest_cache_cold", f"{t_cold * 1e6:.0f}",
+                     f"status={cold.status}"])
+        rows.append(["ingest_cache_warm", f"{t_warm * 1e6:.0f}",
+                     f"status={warm.status} hit={warm_hit} "
+                     f"speedup={t_cold / t_warm:.1f}x"])
+
+        summary = {
+            "shape": {
+                "n": n, "dim": data.dim, "nnz_max": int(nnz_wide),
+                "q": q, "chunk_rows": chunk_rows,
+                "file_mb": file_mb,
+            },
+            "throughput": {
+                "streamed_rows_per_s": n / t_streamed,
+                "oneshot_rows_per_s": n / t_oneshot,
+                "write_s": t_write,
+            },
+            "memory": {
+                "streamed_peak_bytes": int(peak_streamed),
+                "oneshot_peak_bytes": int(peak_oneshot),
+                "budget_bytes": int(budget),
+                "slab_bytes": int(_slab_bytes(streamed)),
+                "peak_within_budget": bool(within),
+            },
+            "cache": {
+                "cold_s": t_cold,
+                "warm_s": t_warm,
+                "warm_speedup": t_cold / t_warm,
+                "warm_hit": bool(warm_hit),
+            },
+            "streamed_equals_oneshot": bool(equal),
+        }
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    ensure_dir()
+    path = write_csv("ingest.csv", ["name", "us_per_call", "derived"], rows)
+    return path, rows, summary
+
+
+def contracts_hold(summary: dict) -> bool:
+    """The certified invariants a CI run gates on."""
+    return (
+        summary["streamed_equals_oneshot"]
+        and summary["cache"]["warm_hit"]
+        and summary["memory"]["peak_within_budget"]
+    )
+
+
+def report_payload(summary: dict, wall_us: float, quick: bool) -> dict:
+    """The BENCH_ingest.json schema — one builder for the standalone and
+    the aggregate (benchmarks.run) entry points."""
+    return {
+        "wall_us": wall_us,
+        "quick": quick,
+        "streamed_rows_per_s": summary["throughput"]["streamed_rows_per_s"],
+        "streamed_equals_oneshot": summary["streamed_equals_oneshot"],
+        "peak_within_budget": summary["memory"]["peak_within_budget"],
+        "warm_hit": summary["cache"]["warm_hit"],
+        "warm_speedup": summary["cache"]["warm_speedup"],
+        "detail": summary,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small file (CI smoke mode)")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    path, rows, summary = run(quick=args.quick)
+    payload = report_payload(
+        summary, (time.perf_counter() - t0) * 1e6, args.quick)
+    write_bench_json("ingest", payload)
+    print(f"ingest: wrote {len(rows)} rows to {path}")
+    for r in rows:
+        print("  ", ",".join(map(str, r)))
+    print(
+        f"  streamed {payload['streamed_rows_per_s']:.0f} rows/s at "
+        f"chunk={summary['shape']['chunk_rows']}; peak "
+        f"{summary['memory']['streamed_peak_bytes'] / 2**20:.1f}MB vs "
+        f"budget {summary['memory']['budget_bytes'] / 2**20:.1f}MB; warm "
+        f"cache {payload['warm_speedup']:.1f}x; "
+        f"equal={payload['streamed_equals_oneshot']}"
+    )
+    if not contracts_hold(summary):
+        raise SystemExit(
+            "ingest contracts FAILED: "
+            f"equal={summary['streamed_equals_oneshot']} "
+            f"warm_hit={summary['cache']['warm_hit']} "
+            f"within_budget={summary['memory']['peak_within_budget']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ def main() -> None:
     from benchmarks import (
         chaos_bench,
         convergence,
+        ingest_bench,
         kernels_bench,
         lambda_sensitivity,
         lazy_bench,
@@ -120,6 +121,20 @@ def main() -> None:
     )
     write_bench_json(
         "chaos", chaos_bench.report_payload(chaos_summary, us, args.quick)
+    )
+
+    t = time.perf_counter()
+    _, rows, ingest_summary = ingest_bench.run(quick=args.quick)
+    for r in rows:
+        print(",".join(map(str, r)))
+    us = stamp(
+        "ingest_total", t,
+        f"{ingest_summary['throughput']['streamed_rows_per_s']:.0f}rows/s;"
+        f"equal={ingest_summary['streamed_equals_oneshot']};"
+        f"warm={ingest_summary['cache']['warm_speedup']:.1f}x",
+    )
+    write_bench_json(
+        "ingest", ingest_bench.report_payload(ingest_summary, us, args.quick)
     )
 
     t = time.perf_counter()

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
 from repro.configs import get_config, reduced_config
-from repro.data.pipeline import PipelineConfig, batches
+from repro.data.token_stream import PipelineConfig, batches
 from repro.optim import optimizers
 from repro.sharding.specs import unsharded_ctx
 from repro.train.loop import TrainSettings, init_state, make_train_step

@@ -17,6 +17,12 @@ the cache lives):
   the identity check also guards against ``id()`` recycling.
 * **LRU bound** — at most :attr:`BlockCache.max_entries` distinct ``q``
   values are kept for the current data set.
+
+Streamed sources (:class:`~repro.data.pipeline.DataSource`) share the
+same in-process cache through :meth:`BlockCache.get_source` — identity
+keyed like arrays, so a sweep holding one source object re-ingests
+nothing — layered over the on-disk slab cache
+(:mod:`repro.data.ingest_cache`) when the caller passes ``cache_dir``.
 """
 
 from __future__ import annotations
@@ -39,20 +45,57 @@ class BlockCache:
 
     def get(self, data: PaddedCSR, q: int) -> BlockCSR:
         """The BlockCSR of ``data`` at ``q`` blocks, built at most once."""
-        key = (id(data), q)
+        hit = self._lookup(data, q)
+        if hit is not None:
+            return hit
+        block = BlockCSR.from_padded(data, balanced(data.dim, q))
+        self._insert(data, q, block)
+        return block
+
+    def get_source(
+        self,
+        source,
+        q: int,
+        *,
+        cache_dir: str | None = None,
+        chunk_rows: int = 65536,
+    ) -> BlockCSR:
+        """The streamed BlockCSR of a DataSource at ``q`` blocks.
+
+        Memory layer: identity-keyed like :meth:`get` (one ingest per
+        (source object, q) while the sweep holds it).  Disk layer: with
+        ``cache_dir``, a miss here goes through
+        :func:`repro.data.ingest_cache.get_or_build`, so even a fresh
+        process warm-loads slabs instead of parsing.
+        """
+        from repro.data.ingest_cache import get_or_build
+
+        hit = self._lookup(source, q)
+        if hit is not None:
+            return hit
+        partition = balanced(source.stats().dim, q)
+        outcome = get_or_build(
+            source, partition, cache_dir=cache_dir, chunk_rows=chunk_rows
+        )
+        self._insert(source, q, outcome.data)
+        return outcome.data
+
+    def _lookup(self, owner, q: int) -> BlockCSR | None:
+        key = (id(owner), q)
         hit = self._entries.get(key)
-        if hit is not None and hit[0] is data:
+        if hit is not None and hit[0] is owner:
             self._entries.move_to_end(key)
             return hit[1]
-        # New data object: the sweep moved on — drop other data sets'
+        return None
+
+    def _insert(self, owner, q: int, block: BlockCSR) -> None:
+        # New owner object: the sweep moved on — drop other data sets'
         # entries (and any stale entry whose id() was recycled).
-        for k in [k for k, v in self._entries.items() if v[0] is not data]:
+        for k in [k for k, v in self._entries.items() if v[0] is not owner]:
             del self._entries[k]
-        block = BlockCSR.from_padded(data, balanced(data.dim, q))
-        self._entries[key] = (data, block)
+        self._entries[(id(owner), q)] = (owner, block)
         while len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)
-        return block
 
     def clear(self) -> None:
         self._entries.clear()

@@ -4,10 +4,18 @@
     PYTHONPATH=src python -m repro.api.cli --list
     PYTHONPATH=src python -m repro.api.cli --config fdsvrg-news20 \\
         --method dsvrg --quick
+    PYTHONPATH=src python -m repro.api.cli --data path/to/train.libsvm \\
+        --data-cache .ingest_cache --workers 8
 
 One flag per spec knob; everything unset resolves through the registry's
 ``"paper"`` defaults.  ``--quick`` is the CI smoke shape: 2 outer
 iterations with the inner loop capped at 300 steps.
+
+``--data`` streams a LibSVM file through the out-of-core ingestion path
+(worker slabs built incrementally, the global matrix never materialized);
+combined with ``--config`` it keeps the preset's loss/reg/eta but swaps
+the data in.  ``--data-cache`` persists the built slabs so re-runs skip
+parsing.
 """
 
 from __future__ import annotations
@@ -33,6 +41,16 @@ def _parser() -> argparse.ArgumentParser:
     )
     p.add_argument("--config", choices=sorted(CONFIGS),
                    help="LinearConfig preset (repro.configs.fdsvrg_linear)")
+    p.add_argument("--data", default=None, metavar="PATH",
+                   help="stream a LibSVM file instead of a preset's "
+                   "synthetic data (out-of-core ingestion; streaming "
+                   "methods only)")
+    p.add_argument("--data-cache", default=None, metavar="DIR",
+                   help="on-disk slab cache for --data (warm re-runs "
+                   "skip parsing)")
+    p.add_argument("--chunk-rows", type=int, default=None,
+                   help="rows per parsed chunk for --data (bounds host "
+                   "memory; default 65536)")
     p.add_argument("--method", default="fdsvrg",
                    help=f"registered method ({', '.join(sorted(METHODS))})")
     p.add_argument("--outer-iters", type=int, default=None)
@@ -79,17 +97,29 @@ def main(argv: list[str] | None = None) -> int:
     if args.list:
         _print_registry()
         return 0
-    if args.config is None:
-        print("error: --config is required (or use --list)", file=sys.stderr)
+    if args.config is None and args.data is None:
+        print("error: --config or --data is required (or use --list)",
+              file=sys.stderr)
         return 2
     try:
         info = method_info(args.method)  # fail fast on unknown methods
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
-    lc = CONFIGS[args.config]
+    lc = CONFIGS[args.config] if args.config is not None else None
 
     overrides: dict = {}
+    if args.data is not None:
+        overrides["dataset"] = None  # the source replaces any preset data
+        overrides["source"] = args.data
+        if args.data_cache is not None:
+            overrides["data_cache_dir"] = args.data_cache
+        if args.chunk_rows is not None:
+            overrides["ingest_chunk_rows"] = args.chunk_rows
+    elif args.data_cache is not None or args.chunk_rows is not None:
+        print("error: --data-cache/--chunk-rows only apply with --data",
+              file=sys.stderr)
+        return 2
     if args.outer_iters is not None:
         overrides["outer_iters"] = args.outer_iters
     if args.eta is not None:
@@ -100,7 +130,7 @@ def main(argv: list[str] | None = None) -> int:
         overrides["inner_steps"] = args.inner_steps
     if args.workers is not None:
         overrides["q"] = args.workers
-    elif info.needs_mesh:
+    elif info.needs_mesh and lc is not None:
         # shard_map: the worker count IS the mesh size; drop the config's
         # paper worker count so the default 1-device mesh decides — and
         # say so, because a q=1 run meters zero communication and is NOT
@@ -128,10 +158,21 @@ def main(argv: list[str] | None = None) -> int:
         overrides.setdefault("outer_iters", 2)
         overrides.setdefault("inner_steps", min(300, PAPER_MAX_INNER))
 
-    print(f"config {lc.name}: dataset={lc.dataset} method={args.method} "
-          f"({info.summary})")
+    if lc is not None:
+        data_desc = (
+            f"data={args.data}" if args.data else f"dataset={lc.dataset}"
+        )
+        print(f"config {lc.name}: {data_desc} method={args.method} "
+              f"({info.summary})")
+        make_spec = lambda: lc.to_spec(method=args.method, **overrides)
+    else:
+        from repro.api.spec import ExperimentSpec
+
+        overrides.pop("dataset", None)
+        print(f"data {args.data}: method={args.method} ({info.summary})")
+        make_spec = lambda: ExperimentSpec(method=args.method, **overrides)
     try:
-        result = solve(lc.to_spec(method=args.method, **overrides))
+        result = solve(make_spec())
     except (TypeError, ValueError) as e:
         # spec/capability validation errors follow the CLI's one-line
         # error convention, same as a missing --config

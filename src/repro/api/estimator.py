@@ -2,8 +2,10 @@
 the solver registry.
 
 This is the first user-facing *serving* scenario for the repo's trained
-linear models: fit on a :class:`~repro.data.sparse.PaddedCSR` (or a
-dense ``(X, y)`` pair, converted internally), then
+linear models: fit on a :class:`~repro.data.sparse.PaddedCSR`, a dense
+``(X, y)`` pair (converted internally), or — the out-of-core path — a
+:class:`~repro.data.pipeline.DataSource` / LibSVM file path (labels come
+from the source; the global matrix is never materialized), then
 ``decision_function`` / ``predict`` / ``score`` like any sklearn linear
 classifier.  Any registered method is a constructor argument away —
 ``FDSVRGClassifier(method="dsvrg")`` trains with the DSVRG driver
@@ -19,6 +21,8 @@ does not replay.
 
 from __future__ import annotations
 
+import os
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -26,7 +30,20 @@ from repro.api.registry import solve
 from repro.api.spec import PAPER, ExperimentSpec
 from repro.core import losses as losses_lib
 from repro.core.driver import OuterRecord
+from repro.data.pipeline import (
+    as_source,
+    is_source,
+    source_labels,
+    streamed_margins,
+)
 from repro.data.sparse import PaddedCSR, margins
+
+
+def _coerce_input(X):
+    """A path becomes a streaming LibSVM source; everything else passes."""
+    if isinstance(X, (str, os.PathLike)):
+        return as_source(X)
+    return X
 
 
 def as_padded_csr(X, y=None) -> PaddedCSR:
@@ -108,6 +125,8 @@ class FDSVRGClassifier:
         checkpoint_dir: str | None = None,
         checkpoint_every: int = 1,
         resume: bool = False,
+        data_cache_dir: str | None = None,
+        ingest_chunk_rows: int = 65536,
     ) -> None:
         self.method = method
         self.workers = workers
@@ -127,6 +146,8 @@ class FDSVRGClassifier:
         self.checkpoint_dir = checkpoint_dir
         self.checkpoint_every = checkpoint_every
         self.resume = resume
+        self.data_cache_dir = data_cache_dir
+        self.ingest_chunk_rows = ingest_chunk_rows
         self._fits = 0
 
     # -- sklearn-style attributes set by fit: coef_, classes_, history_ --
@@ -135,10 +156,18 @@ class FDSVRGClassifier:
     def is_fitted(self) -> bool:
         return getattr(self, "coef_", None) is not None
 
-    def _spec(self, data: PaddedCSR, outer_iters: int, init_w) -> ExperimentSpec:
+    def _spec(self, data, outer_iters: int, init_w) -> ExperimentSpec:
+        if is_source(data):
+            data_kw = dict(
+                source=data,
+                data_cache_dir=self.data_cache_dir,
+                ingest_chunk_rows=self.ingest_chunk_rows,
+            )
+        else:
+            data_kw = dict(data=data)
         return ExperimentSpec(
             method=self.method,
-            data=data,
+            **data_kw,
             loss=self.loss,
             reg=losses_lib.Regularizer(self.reg, self.lam, self.lam2),
             q=self.workers,
@@ -188,6 +217,21 @@ class FDSVRGClassifier:
         cached = getattr(self, "_encoded", None)
         if cached is not None and cached[0] is X and cached[1] is y:
             return cached[2]
+        if is_source(X):
+            # Streamed sources carry their own canonical {-1, +1} labels
+            # (fixed from the file's global label alphabet at scan time).
+            if y is not None:
+                raise ValueError(
+                    "a DataSource carries its own labels; pass y=None"
+                )
+            classes = np.array([-1.0, 1.0], dtype=np.float32)
+            if self.is_fitted and not np.array_equal(classes, self.classes_):
+                raise ValueError(
+                    f"classes {classes} differ from the fitted {self.classes_}"
+                )
+            self.classes_ = classes
+            self._encoded = (X, y, X)
+            return X
         if isinstance(X, PaddedCSR):
             as_padded_csr(X, y)  # one home for the y-length validation
             signed = self._encode_labels(X.labels if y is None else y)
@@ -221,14 +265,16 @@ class FDSVRGClassifier:
     def partial_fit(self, X, y=None, *, outer_iters: int = 1) -> "FDSVRGClassifier":
         """Continue training from the current coefficients (warm start via
         the harness's snapshot rotation); trains from zeros if unfitted."""
-        data = self._encoded_data(X, y)
+        data = self._encoded_data(_coerce_input(X), y)
         if not hasattr(self, "history_"):
             self.history_ = []
         init_w = jnp.asarray(self.coef_) if self.is_fitted else None
         result = solve(self._spec(data, outer_iters, init_w))
         self._fits += 1
         self.coef_ = np.asarray(result.w)
-        self.n_features_in_ = data.dim
+        self.n_features_in_ = (
+            data.stats().dim if is_source(data) else data.dim
+        )
         # Each solve() starts a fresh meter/clock, so rebase ALL the
         # cumulative fields — not just the outer index — onto the previous
         # history's totals: history_ then reads as one continuous run
@@ -263,8 +309,17 @@ class FDSVRGClassifier:
             raise ValueError("this FDSVRGClassifier is not fitted yet")
 
     def decision_function(self, X) -> np.ndarray:
-        """Margins ``w^T x_i``; positive means ``classes_[1]``."""
+        """Margins ``w^T x_i``; positive means ``classes_[1]``.
+
+        Streamed input (a DataSource or LibSVM path) is scored one chunk
+        at a time — serving never materializes the matrix either.
+        """
         self._check_fitted()
+        X = _coerce_input(X)
+        if is_source(X):
+            return streamed_margins(
+                X, self.coef_, chunk_rows=self.ingest_chunk_rows
+            )
         if isinstance(X, PaddedCSR):
             return np.asarray(margins(X, jnp.asarray(self.coef_)))
         X = np.asarray(X)
@@ -275,15 +330,21 @@ class FDSVRGClassifier:
         return self.classes_[(self.decision_function(X) > 0).astype(int)]
 
     def score(self, X, y=None) -> float:
-        """Mean accuracy on ``(X, y)``.  ``y=None`` uses a PaddedCSR's own
-        stored labels; if the model was fitted on classes other than the
-        stored ±1 coding, the ±1 labels are decoded through ``classes_``
-        (same convention as the fit-time encoding: +1 is ``classes_[1]``)
-        so the comparison happens in one label space."""
+        """Mean accuracy on ``(X, y)``.  ``y=None`` uses a PaddedCSR's (or
+        a streamed source's) own stored labels; if the model was fitted on
+        classes other than the stored ±1 coding, the ±1 labels are decoded
+        through ``classes_`` (same convention as the fit-time encoding: +1
+        is ``classes_[1]``) so the comparison happens in one label space."""
+        X = _coerce_input(X)
         if y is None:
-            if not isinstance(X, PaddedCSR):
-                raise ValueError("score() needs y unless X is a PaddedCSR")
-            y = np.asarray(X.labels)
+            if is_source(X):
+                y = source_labels(X, chunk_rows=self.ingest_chunk_rows)
+            elif isinstance(X, PaddedCSR):
+                y = np.asarray(X.labels)
+            else:
+                raise ValueError(
+                    "score() needs y unless X is a PaddedCSR or a source"
+                )
             if self.is_fitted and not np.isin(y, self.classes_).all():
                 if set(np.unique(y)) <= {-1.0, 1.0}:
                     y = self.classes_[(y > 0).astype(int)]

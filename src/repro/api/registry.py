@@ -58,6 +58,7 @@ from repro.core.fdsvrg import (
 from repro.core.fdsvrg_shardmap import FDSVRGShardedConfig, run_fdsvrg_sharded
 from repro.core.partition import balanced
 from repro.data import datasets
+from repro.data.pipeline import as_source, is_source
 from repro.dist import SimBackend, make_mesh
 
 #: Cap on inner steps per outer for the scaled trajectories of the largest
@@ -82,6 +83,9 @@ class MethodInfo:
     supports_option_ii: bool = True
     needs_mesh: bool = False
     supports_checkpoint: bool = False  # outer-loop checkpoint/resume
+    # Can run from streamed per-worker slabs alone (spec.source=...),
+    # never touching a global PaddedCSR.
+    supports_streaming: bool = False
     # "paper" auto-default operating point (tuned on the scaled sets,
     # fixed like the paper; lifted from benchmarks/common.py):
     paper_eta: float = 1.0
@@ -113,6 +117,7 @@ def register_method(
     supports_option_ii: bool = True,
     needs_mesh: bool = False,
     supports_checkpoint: bool = False,
+    supports_streaming: bool = False,
     paper_eta: float,
     paper_batch: int = 1,
     inner_rule: str,
@@ -140,6 +145,7 @@ def register_method(
             supports_option_ii=supports_option_ii,
             needs_mesh=needs_mesh,
             supports_checkpoint=supports_checkpoint,
+            supports_streaming=supports_streaming,
             paper_eta=paper_eta,
             paper_batch=paper_batch,
             inner_rule=inner_rule,
@@ -203,6 +209,16 @@ def _validate(spec: ExperimentSpec, info: MethodInfo) -> None:
             f"{spec.tree_mode!r}; the collective topology is a shard_map "
             "knob (fdsvrg_sharded) — it would not be honored here"
         )
+    if spec.source is not None and not info.supports_streaming:
+        raise ValueError(
+            f"method {info.name!r} cannot run from a streamed source "
+            f"(streaming methods: "
+            f"{', '.join(sorted(m for m, i in METHODS.items() if i.supports_streaming))}). "
+            "This driver needs the global matrix; materializing it behind "
+            "your back would defeat the out-of-core path — load the data "
+            "yourself (data=repro.data.load_libsvm(...)) if that is what "
+            "you want."
+        )
     if spec.checkpoint_dir is not None and not info.supports_checkpoint:
         raise ValueError(
             f"method {info.name!r} does not support checkpoint/resume "
@@ -250,7 +266,17 @@ def solve(spec: ExperimentSpec) -> RunResult:
     """
     info = method_info(spec.method)
     _validate(spec, info)
-    data = spec.data if spec.data is not None else _load_dataset(spec.dataset)
+    if spec.source is not None:
+        # The streaming path: `data` is a DataSource handle the adapter
+        # turns into per-worker slabs (through the block/slab caches) —
+        # the global PaddedCSR is never materialized.
+        data = as_source(spec.source)
+        n = data.stats().num_instances
+    else:
+        data = (
+            spec.data if spec.data is not None else _load_dataset(spec.dataset)
+        )
+        n = data.num_instances
     mesh = None
     if info.needs_mesh:
         mesh = spec.mesh if spec.mesh is not None else make_mesh((1,), ("model",))
@@ -267,7 +293,7 @@ def solve(spec: ExperimentSpec) -> RunResult:
         q = datasets.spec(spec.dataset).default_workers
     else:
         q = 1
-    resolved = _resolve(spec, info, data.num_instances, q)
+    resolved = _resolve(spec, info, n, q)
     return info.run(spec, data, resolved, mesh)
 
 
@@ -283,6 +309,7 @@ def capability_matrix() -> list[dict]:
             "option_II": i.supports_option_ii,
             "mesh": i.needs_mesh,
             "checkpoint": i.supports_checkpoint,
+            "streaming": i.supports_streaming,
             "paper_eta": i.paper_eta,
             "paper_batch": i.paper_batch,
             "inner_rule": i.inner_rule,
@@ -318,48 +345,73 @@ def _checkpoint_policy(spec: ExperimentSpec) -> CheckpointPolicy | None:
     )
 
 
+def _source_slabs(spec: ExperimentSpec, source, q: int):
+    """Streamed per-worker slabs for a source= run, through both cache
+    layers (in-process identity cache; on-disk when the spec names one)."""
+    return BLOCK_CACHE.get_source(
+        source,
+        q,
+        cache_dir=spec.data_cache_dir,
+        chunk_rows=spec.ingest_chunk_rows,
+    )
+
+
 @register_method(
     "serial", backend="none", supports_kernels=True, supports_lazy=True,
-    supports_checkpoint=True,
+    supports_checkpoint=True, supports_streaming=True,
     paper_eta=2.0, inner_rule="n",
     summary="Algorithm 2 (serial SVRG), the proof reference",
 )
 def _solve_serial(spec, data, p, mesh) -> RunResult:
+    block = None
+    if is_source(data):
+        # Serial runs on the q=1 layout whatever spec.q says (q only
+        # shapes the FD partitions).
+        block, data = _source_slabs(spec, data, 1), None
     return run_serial_svrg(
         data, losses_lib.LOSSES[spec.loss], spec.reg, _svrg_config(spec, p),
         use_kernels=spec.use_kernels, lazy_updates=spec.lazy_updates,
+        block_data=block,
         init_w=spec.init_w, checkpoint=_checkpoint_policy(spec),
     )
 
 
 @register_method(
     "fdsvrg", backend="sim", supports_kernels=True, supports_lazy=True,
-    supports_checkpoint=True,
+    supports_checkpoint=True, supports_streaming=True,
     paper_eta=2.0, paper_batch=PAPER_FD_BATCH, inner_rule="n_over_u",
     summary="Algorithm 1 (FD-SVRG), jitted metered simulation",
 )
 def _solve_fdsvrg(spec, data, p, mesh) -> RunResult:
+    if is_source(data):
+        block, data = _source_slabs(spec, data, p.q), None
+    else:
+        block = BLOCK_CACHE.get(data, p.q)
     return run_fdsvrg(
-        data, balanced(data.dim, p.q), losses_lib.LOSSES[spec.loss], spec.reg,
+        data, block.partition, losses_lib.LOSSES[spec.loss], spec.reg,
         _svrg_config(spec, p), spec.cluster,
         use_kernels=spec.use_kernels, lazy_updates=spec.lazy_updates,
-        block_data=BLOCK_CACHE.get(data, p.q),
+        block_data=block,
         init_w=spec.init_w, checkpoint=_checkpoint_policy(spec),
     )
 
 
 @register_method(
     "fdsvrg_sim", backend="sim", supports_kernels=True, supports_lazy=True,
-    supports_checkpoint=True,
+    supports_checkpoint=True, supports_streaming=True,
     paper_eta=2.0, paper_batch=PAPER_FD_BATCH, inner_rule="n_over_u",
     summary="Algorithm 1, explicit q-worker object-level simulation",
 )
 def _solve_fdsvrg_sim(spec, data, p, mesh) -> RunResult:
+    if is_source(data):
+        block, data = _source_slabs(spec, data, p.q), None
+    else:
+        block = BLOCK_CACHE.get(data, p.q)
     return fdsvrg_worker_simulation(
-        data, balanced(data.dim, p.q), losses_lib.LOSSES[spec.loss], spec.reg,
+        data, block.partition, losses_lib.LOSSES[spec.loss], spec.reg,
         _svrg_config(spec, p), SimBackend(p.q, spec.cluster),
         use_kernels=spec.use_kernels, lazy_updates=spec.lazy_updates,
-        block_data=BLOCK_CACHE.get(data, p.q),
+        block_data=block,
         init_w=spec.init_w, checkpoint=_checkpoint_policy(spec),
     )
 

@@ -45,15 +45,27 @@ PAPER = "paper"
 class ExperimentSpec:
     """A complete, declarative description of one optimization run.
 
-    Exactly one of ``dataset`` (a :mod:`repro.data.datasets` key) or
-    ``data`` (an in-memory :class:`~repro.data.sparse.PaddedCSR`) must be
-    set.  ``eq=False``: specs carry device arrays (``data``, ``init_w``),
-    so identity — not elementwise comparison — is the right equality.
+    Exactly one of ``dataset`` (a :mod:`repro.data.datasets` key),
+    ``data`` (an in-memory :class:`~repro.data.sparse.PaddedCSR`), or
+    ``source`` (a :class:`~repro.data.pipeline.DataSource` or a LibSVM
+    file path — the streaming out-of-core path) must be set.
+    ``eq=False``: specs carry device arrays (``data``, ``init_w``), so
+    identity — not elementwise comparison — is the right equality.
     """
 
     method: str
     dataset: str | None = None
     data: PaddedCSR | None = None
+    # Streaming ingestion (repro.data.pipeline): a DataSource instance or
+    # a path to a LibSVM file.  Worker slabs are built incrementally —
+    # bit-identical to the in-memory path — and never materialize the
+    # global matrix; methods must advertise supports_streaming.
+    source: Any | None = None
+    # On-disk slab cache for source= runs (repro.data.ingest_cache); None
+    # disables caching.  Warm hits skip parsing entirely.
+    data_cache_dir: str | None = None
+    # Host-memory bound for streamed parsing, in rows per chunk.
+    ingest_chunk_rows: int = 65536
     loss: str = "logistic"
     reg: losses_lib.Regularizer = losses_lib.l2(1e-4)  # paper §5.3 default
     q: int | None = None  # workers; None -> dataset default (or 1 for raw data)
@@ -82,10 +94,24 @@ class ExperimentSpec:
     tree_mode: str = "psum"  # "psum" | "butterfly"
 
     def __post_init__(self) -> None:
-        if (self.dataset is None) == (self.data is None):
+        given = sum(
+            x is not None for x in (self.dataset, self.data, self.source)
+        )
+        if given != 1:
             raise ValueError(
-                "exactly one of dataset= (a repro.data.datasets key) or "
-                "data= (a PaddedCSR) must be set"
+                "exactly one of dataset= (a repro.data.datasets key), "
+                "data= (a PaddedCSR), or source= (a DataSource / LibSVM "
+                "path) must be set"
+            )
+        if self.ingest_chunk_rows < 1:
+            raise ValueError(
+                f"ingest_chunk_rows >= 1 required, got "
+                f"{self.ingest_chunk_rows!r}"
+            )
+        if self.data_cache_dir is not None and self.source is None:
+            raise ValueError(
+                "data_cache_dir= only applies to source= runs (the "
+                "in-memory paths have nothing to cache on disk)"
             )
         if self.option not in ("I", "II"):
             raise ValueError(f"option must be 'I' or 'II', got {self.option!r}")

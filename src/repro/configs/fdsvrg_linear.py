@@ -62,6 +62,10 @@ CONFIGS = {
     "fdsvrg-url": LinearConfig("fdsvrg-url", "url"),
     "fdsvrg-webspam": LinearConfig("fdsvrg-webspam", "webspam"),
     "fdsvrg-kdd2010": LinearConfig("fdsvrg-kdd2010", "kdd2010"),
+    # Avazu CTR (d ≈ 10^6 one-hot features, tiny per-row nnz): the
+    # ad-click workload of the mxnet feature-distributed exemplar, and
+    # the first preset sized for the streaming ingestion path.
+    "fdsvrg-avazu": LinearConfig("fdsvrg-avazu", "avazu"),
     # Proximal variants (FD-Prox-SVRG): sparse-text L1 on the two d >> N
     # sets, plus an elastic-net middle ground on webspam.
     "fdsvrg-news20-l1": LinearConfig(

@@ -589,29 +589,43 @@ def _lazy_inner_epoch(
 
 
 def run_serial_svrg(
-    data: PaddedCSR,
+    data: PaddedCSR | None,
     loss: losses_lib.MarginLoss,
     reg: losses_lib.Regularizer,
     cfg: SVRGConfig,
     *,
     use_kernels: bool = False,
+    block_data: BlockCSR | None = None,
     init_w: jax.Array | None = None,
     lazy_updates: str | None = None,
     recovery: RecoveryPolicy | None = None,
     checkpoint: CheckpointPolicy | None = None,
 ) -> RunResult:
     _check_lazy(lazy_updates)
-    # The q=1 BlockCSR shares the PaddedCSR arrays (local ids == global).
-    block_data = BlockCSR.from_padded(data, balanced(data.dim, 1))
+    if block_data is None:
+        if data is None:
+            raise ValueError("pass data or a prebuilt block_data")
+        # The q=1 BlockCSR shares the PaddedCSR arrays (local ids == global).
+        block_data = BlockCSR.from_padded(data, balanced(data.dim, 1))
+    elif block_data.num_blocks != 1:
+        raise ValueError(
+            f"serial SVRG runs on the q=1 layout; block_data has "
+            f"{block_data.num_blocks} blocks"
+        )
+    # Everything below reads the block layout only — a streamed build
+    # (repro.data.pipeline.stream_block_csr) runs without the global
+    # PaddedCSR ever existing.
+    labels = block_data.labels
+    n = block_data.num_instances
     block_dims = block_data.block_dims
     kernel_lams = _kernel_lams(reg, use_kernels)
     corrections = _lazy_corrections(
-        block_data, data.num_instances, cfg.batch_size, lazy_updates
+        block_data, n, cfg.batch_size, lazy_updates
     )
 
     def snapshot(w):
         return _full_grad_blocks(
-            block_data.indices, block_data.values, data.labels, w,
+            block_data.indices, block_data.values, labels, w,
             loss.name, block_dims, use_kernels,
         )
 
@@ -620,12 +634,11 @@ def run_serial_svrg(
         # < 1) reuses the compiled scan; eta * 1.0 is bit-exact on the
         # default path.
         eta = cfg.eta * eta_scale
-        samples = draw_samples(rng, data.num_instances, cfg.inner_steps,
-                               cfg.batch_size)
+        samples = draw_samples(rng, n, cfg.inner_steps, cfg.batch_size)
         mask = option_mask(rng, cfg.inner_steps, cfg.option)
         if lazy_updates is not None:
             return _lazy_inner_epoch(
-                block_data.indices, block_data.values, data.labels,
+                block_data.indices, block_data.values, labels,
                 w, z_data, s0,
                 jnp.asarray(samples), eta, jnp.asarray(mask),
                 corrections, loss.name, reg.name, reg.lam, block_dims,
@@ -633,7 +646,7 @@ def run_serial_svrg(
                 kernel_lams=kernel_lams,
             )
         return _inner_epoch(
-            block_data.indices, block_data.values, data.labels,
+            block_data.indices, block_data.values, labels,
             w, z_data, s0,
             jnp.asarray(samples), eta, jnp.asarray(mask),
             loss.name, reg.name, reg.lam, block_dims, use_kernels,
@@ -643,10 +656,12 @@ def run_serial_svrg(
     return run_outer_loop(
         outer_iters=cfg.outer_iters,
         seed=cfg.seed,
-        init_w=resolve_init_w(init_w, data.dim, data.values.dtype),
+        init_w=resolve_init_w(
+            init_w, block_data.dim, block_data.values[0].dtype
+        ),
         snapshot=snapshot,
         epoch=epoch,
-        evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
+        evaluate=make_same_iterate_eval(labels, loss, reg, cfg.eta),
         recovery=recovery,
         checkpoint=checkpoint,
     )
@@ -658,7 +673,7 @@ def run_serial_svrg(
 
 
 def run_fdsvrg(
-    data: PaddedCSR,
+    data: PaddedCSR | None,
     partition: FeaturePartition,
     loss: losses_lib.MarginLoss,
     reg: losses_lib.Regularizer,
@@ -679,7 +694,9 @@ def run_fdsvrg(
     decomposition w^T x = sum_l w^(l)T x^(l) is exact; summation follows
     the tree order), computed on the block-local
     :class:`~repro.data.block_csr.BlockCSR` layout (built once here, or
-    passed in as ``block_data`` to amortize across runs).
+    passed in as ``block_data`` to amortize across runs — in which case
+    ``data=None`` is allowed and nothing global is ever touched: the
+    streamed ingestion path runs the driver from per-worker slabs alone).
     Communication/time: the paper's accounting, metered through
     ``backend`` (default: a fresh ``SimBackend``) with the shared §4.5
     closed forms (:data:`repro.dist.COSTS`) —
@@ -701,17 +718,26 @@ def run_fdsvrg(
             f"{q} blocks"
         )
     if block_data is None:
+        if data is None:
+            raise ValueError("pass data or a prebuilt block_data")
         block_data = BlockCSR.from_padded(data, partition)
     elif block_data.partition.bounds != partition.bounds:
         raise ValueError("block_data was built for a different partition")
+    labels = block_data.labels
     block_dims = block_data.block_dims
     kernel_lams = _kernel_lams(reg, use_kernels)
-    n, u, nnz = data.num_instances, cfg.batch_size, data.nnz_max
+    # Cost accounting reads only slab metadata, so modeled time matches
+    # the in-memory path bit-for-bit (global_nnz_max is carried by both).
+    n, u, nnz = (
+        block_data.num_instances,
+        cfg.batch_size,
+        block_data.global_nnz_max(),
+    )
     corrections = _lazy_corrections(block_data, n, u, lazy_updates)
 
     def snapshot(w):
         return _full_grad_blocks(
-            block_data.indices, block_data.values, data.labels, w,
+            block_data.indices, block_data.values, labels, w,
             loss.name, block_dims, use_kernels,
         )
 
@@ -726,7 +752,7 @@ def run_fdsvrg(
         mask = option_mask(rng, cfg.inner_steps, cfg.option)
         if lazy_updates is not None:
             w = _lazy_inner_epoch(
-                block_data.indices, block_data.values, data.labels,
+                block_data.indices, block_data.values, labels,
                 w, z_data, s0,
                 jnp.asarray(samples), eta, jnp.asarray(mask),
                 corrections, loss.name, reg.name, reg.lam, block_dims,
@@ -735,7 +761,7 @@ def run_fdsvrg(
             )
         else:
             w = _inner_epoch(
-                block_data.indices, block_data.values, data.labels,
+                block_data.indices, block_data.values, labels,
                 w, z_data, s0,
                 jnp.asarray(samples), eta, jnp.asarray(mask),
                 loss.name, reg.name, reg.lam, block_dims, use_kernels,
@@ -752,10 +778,12 @@ def run_fdsvrg(
     return run_outer_loop(
         outer_iters=cfg.outer_iters,
         seed=cfg.seed,
-        init_w=resolve_init_w(init_w, data.dim, data.values.dtype),
+        init_w=resolve_init_w(
+            init_w, block_data.dim, block_data.values[0].dtype
+        ),
         snapshot=snapshot,
         epoch=epoch,
-        evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
+        evaluate=make_same_iterate_eval(labels, loss, reg, cfg.eta),
         backend=backend,
         recovery=_with_default_abort(recovery, n, nnz, q),
         checkpoint=checkpoint,
@@ -848,7 +876,7 @@ def _sim_lazy_proba(w_block, idx, val, coef, z_block, corr_block, eta_m,
 
 
 def fdsvrg_worker_simulation(
-    data: PaddedCSR,
+    data: PaddedCSR | None,
     partition: FeaturePartition,
     loss: losses_lib.MarginLoss,
     reg: losses_lib.Regularizer,
@@ -884,12 +912,15 @@ def fdsvrg_worker_simulation(
     q = partition.num_blocks
     backend = backend or SimBackend(q)
     if block_data is None:
+        if data is None:
+            raise ValueError("pass data or a prebuilt block_data")
         block_data = BlockCSR.from_padded(data, partition)
     elif block_data.partition.bounds != partition.bounds:
         raise ValueError("block_data was built for a different partition")
+    labels = block_data.labels
     block_dims = block_data.block_dims
     bounds = _bounds(block_dims)
-    n = data.num_instances
+    n = block_data.num_instances
 
     def split(w):
         return [w[bounds[l]:bounds[l + 1]] for l in range(q)]
@@ -904,7 +935,7 @@ def fdsvrg_worker_simulation(
             for l in range(q)
         ]
         s0 = tree_order_sum(partials)
-        coeffs0 = loss.dvalue(s0, data.labels) / n
+        coeffs0 = loss.dvalue(s0, labels) / n
         z_blocks = [
             _sim_scatter(*block_data.block(l), coeffs0, block_dims[l])
             for l in range(q)
@@ -947,7 +978,7 @@ def fdsvrg_worker_simulation(
                 (block_data.indices[l][ids], block_data.values[l][ids])
                 for l in range(q)
             ]
-            y = data.labels[ids]
+            y = labels[ids]
             if exact:
                 # Replay each touched feature's deferred steps so the
                 # margin read below sees the materialized values.
@@ -997,13 +1028,15 @@ def fdsvrg_worker_simulation(
     return run_outer_loop(
         outer_iters=cfg.outer_iters,
         seed=cfg.seed,
-        init_w=resolve_init_w(init_w, data.dim, data.values.dtype),
+        init_w=resolve_init_w(
+            init_w, block_data.dim, block_data.values[0].dtype
+        ),
         snapshot=snapshot,
         epoch=epoch,
-        evaluate=make_same_iterate_eval(data.labels, loss, reg, cfg.eta),
+        evaluate=make_same_iterate_eval(labels, loss, reg, cfg.eta),
         backend=backend,
         recovery=_with_default_abort(
-            recovery, n, data.nnz_max, q
+            recovery, n, block_data.global_nnz_max(), q
         ),
         checkpoint=checkpoint,
     )

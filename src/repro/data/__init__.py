@@ -1,6 +1,16 @@
 from repro.data.sparse import PaddedCSR
 from repro.data.block_csr import BlockCSR, local_margins, local_scatter
 from repro.data import datasets, synthetic
+from repro.data.libsvm import load_libsvm, scan_libsvm, write_libsvm
+from repro.data.pipeline import (
+    ArraySource,
+    DataSource,
+    LibSVMSource,
+    SyntheticSource,
+    as_source,
+    stream_block_csr,
+)
+from repro.data.ingest_cache import get_or_build
 
 __all__ = [
     "PaddedCSR",
@@ -9,4 +19,14 @@ __all__ = [
     "local_scatter",
     "datasets",
     "synthetic",
+    "load_libsvm",
+    "scan_libsvm",
+    "write_libsvm",
+    "ArraySource",
+    "DataSource",
+    "LibSVMSource",
+    "SyntheticSource",
+    "as_source",
+    "stream_block_csr",
+    "get_or_build",
 ]

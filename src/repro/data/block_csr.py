@@ -60,6 +60,13 @@ class BlockCSR:
     # repro.kernels.lazy_update.  None means "not computed" (direct
     # constructions); use nnz_col_block() which computes on demand.
     nnz_col: tuple[jax.Array, ...] | None = None
+    # The source's global padded-row width (PaddedCSR.nnz_max).  The
+    # drivers charge per-instance communication/compute cost against it,
+    # so carrying it here lets a run start from slabs alone — no global
+    # PaddedCSR in memory.  None on direct constructions that predate the
+    # streaming path; use global_nnz_max() which falls back to the sum of
+    # per-block budgets (exact when budgets are tight and rows dense).
+    nnz_max: int | None = None
 
     @property
     def num_blocks(self) -> int:
@@ -79,6 +86,18 @@ class BlockCSR:
 
     def block(self, l: int) -> tuple[jax.Array, jax.Array]:
         return self.indices[l], self.values[l]
+
+    def global_nnz_max(self) -> int:
+        """The global padded-row width the cost model charges against.
+
+        Exact when set by the constructor (``from_padded`` /
+        ``stream_block_csr``); otherwise a conservative reconstruction
+        from the per-block budgets (their sum bounds the widest global
+        row from above).
+        """
+        if self.nnz_max is not None:
+            return self.nnz_max
+        return int(sum(self.nnz_budgets))
 
     def nnz_col_block(self, l: int) -> jax.Array:
         """int32[dim_l] per-feature instance counts for block ``l``.
@@ -151,6 +170,7 @@ class BlockCSR:
                         )
                     ),
                 ),
+                nnz_max=data.nnz_max,
             )
         idx = np.asarray(data.indices)
         val = np.asarray(data.values)
@@ -183,6 +203,7 @@ class BlockCSR:
             labels=data.labels,
             dim=data.dim,
             nnz_col=tuple(block_nnz_col),
+            nnz_max=data.nnz_max,
         )
 
     def stacked(self, budget: int | None = None) -> tuple[jax.Array, jax.Array]:

@@ -17,6 +17,7 @@ the d-vs-N regimes intact.  ``scale=1.0`` would reproduce the full sizes
 from __future__ import annotations
 
 import dataclasses
+import os
 
 from repro.data.sparse import PaddedCSR
 from repro.data.synthetic import make_sparse_classification
@@ -41,6 +42,11 @@ TABLE1_FULL = {
     "url": DatasetSpec("url", 3_231_961, 2_396_130, 116, 16),
     "webspam": DatasetSpec("webspam", 16_609_143, 350_000, 3730, 16),
     "kdd2010": DatasetSpec("kdd2010", 29_890_095, 19_264_097, 29, 16),
+    # Avazu CTR (click-through): the d ≈ 10^6, N ≈ 40M ad-click set the
+    # mxnet feature-distributed exemplar runs on.  d < N, but per-row nnz
+    # is tiny (~15 one-hot fields), so the feature-partitioned layout and
+    # the streaming ingestion path are exactly what it needs.
+    "avazu": DatasetSpec("avazu", 1_000_000, 40_428_967, 15, 16),
 }
 
 # Container-scale versions preserving d/N and sparsity character.
@@ -49,11 +55,54 @@ TABLE1_SCALED = {
     "url": DatasetSpec("url", 50_500, 37_440, 24, 16),
     "webspam": DatasetSpec("webspam", 129_760, 2_734, 100, 16),
     "kdd2010": DatasetSpec("kdd2010", 116_758, 75_250, 12, 16),
+    "avazu": DatasetSpec("avazu", 31_250, 1_263_405 // 32, 15, 16),
 }
 
+# One-host materialization budget for load().  The synthetic generator's
+# scratch (float64 uniform + Pareto draws) plus the padded int32/float32
+# arrays cost ~24 bytes per stored entry.
+_BYTES_PER_ENTRY = 24
+_DEFAULT_BUDGET_BYTES = 1 << 30  # 1 GiB
 
-def load(name: str, *, scaled: bool = True, seed: int = 0) -> PaddedCSR:
+
+def materialize_bytes(spec: DatasetSpec) -> int:
+    """Estimated one-host bytes to generate + hold ``spec`` padded."""
+    return spec.num_instances * spec.nnz_per_instance * _BYTES_PER_ENTRY
+
+
+def load(
+    name: str,
+    *,
+    scaled: bool = True,
+    seed: int = 0,
+    max_bytes: int | None = None,
+) -> PaddedCSR:
+    """Materialize a preset as one in-memory :class:`PaddedCSR`.
+
+    Guarded: materializing a full Table-1 set (url: ~6.7 GB, webspam:
+    ~31 GB, avazu: ~15 GB) on one host is exactly what the streaming
+    path exists to avoid, so estimates above the budget (default 1 GiB;
+    override with ``max_bytes`` or ``REPRO_MATERIALIZE_BUDGET_BYTES``)
+    raise instead of OOM-ing.
+    """
     spec = (TABLE1_SCALED if scaled else TABLE1_FULL)[name]
+    budget = max_bytes
+    if budget is None:
+        budget = int(
+            os.environ.get(
+                "REPRO_MATERIALIZE_BUDGET_BYTES", _DEFAULT_BUDGET_BYTES
+            )
+        )
+    est = materialize_bytes(spec)
+    if est > budget:
+        raise MemoryError(
+            f"materializing {name!r} (scaled={scaled}) needs ~{est / 1e9:.1f} GB"
+            f" on one host (budget {budget / 1e9:.1f} GB); use the streaming"
+            " path instead — repro.data.pipeline.SyntheticSource"
+            f".from_dataset({name!r}, scaled={scaled}) with"
+            " stream_block_csr/solve(source=...), or raise max_bytes /"
+            " REPRO_MATERIALIZE_BUDGET_BYTES if you really have the RAM."
+        )
     return make_sparse_classification(
         dim=spec.dim,
         num_instances=spec.num_instances,

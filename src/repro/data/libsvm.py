@@ -1,0 +1,295 @@
+"""Chunked LibSVM text ingestion: parse, scan, write.
+
+The paper's data sets (news20, url, webspam, kdd2010 — and the Avazu set
+of the mxnet feature-distributed exemplar) ship as LibSVM text:
+
+    <label> <index>:<value> <index>:<value> ...   # optional comment
+
+with **1-based** feature indices.  This module owns the three text-level
+operations; everything block/worker-shaped lives in
+:mod:`repro.data.pipeline`:
+
+* :func:`iter_libsvm_rows` / :func:`iter_libsvm_chunks` — a streaming
+  parser holding one chunk of rows in memory at a time.  Handles the
+  format's corners: 1-based indices (converted to 0-based here, once),
+  ``#`` comments (whole-line and trailing), blank lines, empty rows
+  (label only), ranking ``qid:`` tokens (skipped), and duplicate feature
+  ids (preserved in file order — the scatter paths apply duplicates in
+  program order, so order is part of the numerics contract).
+* :func:`scan_libsvm` — the cheap stats pass (N, max index, widest row,
+  label alphabet) a streaming build needs before it can partition
+  features or canonicalize labels.
+* :func:`write_libsvm` — the inverse, used by tests/benchmarks to
+  generate real files from synthetic data.  Values are written with
+  ``repr`` so a float32 survives the text round trip bit-for-bit.
+* :func:`load_libsvm` — one-shot file -> :class:`PaddedCSR`, built on
+  the same chunk iterator (ONE parser; the streamed and one-shot paths
+  cannot drift).
+
+Label conventions: files in the wild use {-1,+1}, {0,1}, or two
+arbitrary values.  :func:`canonical_label_map` fixes one deterministic
+rule — +/-1 pass through, {0,1} maps 0 -> -1, any other two-value
+alphabet maps (sorted) low -> -1 / high -> +1 — applied identically by
+the one-shot loader and the streaming source, from the *global* label
+alphabet (a per-chunk decision would be ambiguous: a chunk containing
+only ``1``\\ s cannot know whether its file is 0/1- or +/-1-coded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, TextIO
+
+import numpy as np
+
+
+class LibSVMFormatError(ValueError):
+    """A malformed LibSVM line, with the 1-based line number."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LibSVMStats:
+    """What one stats pass over a file learns (see :func:`scan_libsvm`)."""
+
+    num_instances: int
+    max_index: int  # largest 0-based feature id seen; -1 if no entries
+    nnz_max: int  # widest row (stored entries, explicit zeros included)
+    nnz_total: int  # stored entries over the whole file
+    label_values: tuple[float, ...]  # sorted unique raw labels
+
+
+def _parse_line(
+    line: str, lineno: int
+) -> tuple[float, list[int], list[float]] | None:
+    """One row -> (raw label, 0-based ids, values); None for non-data lines."""
+    hash_at = line.find("#")
+    if hash_at != -1:
+        line = line[:hash_at]
+    parts = line.split()
+    if not parts:
+        return None
+    try:
+        label = float(parts[0])
+    except ValueError:
+        raise LibSVMFormatError(
+            f"line {lineno}: label {parts[0]!r} is not a number"
+        ) from None
+    ids: list[int] = []
+    vals: list[float] = []
+    for tok in parts[1:]:
+        idx_s, sep, val_s = tok.partition(":")
+        if not sep:
+            raise LibSVMFormatError(
+                f"line {lineno}: expected index:value, got {tok!r}"
+            )
+        if idx_s == "qid":  # ranking metadata, not a feature
+            continue
+        try:
+            idx = int(idx_s)
+            val = float(val_s)
+        except ValueError:
+            raise LibSVMFormatError(
+                f"line {lineno}: expected index:value, got {tok!r}"
+            ) from None
+        if idx < 1:
+            raise LibSVMFormatError(
+                f"line {lineno}: LibSVM indices are 1-based, got {idx}"
+            )
+        ids.append(idx - 1)
+        vals.append(val)
+    return label, ids, vals
+
+
+def iter_libsvm_rows(
+    f: TextIO,
+) -> Iterator[tuple[float, list[int], list[float]]]:
+    """Data rows of an open LibSVM file, comments/blanks skipped."""
+    for lineno, line in enumerate(f, start=1):
+        row = _parse_line(line, lineno)
+        if row is not None:
+            yield row
+
+
+def iter_libsvm_chunks(
+    path: str, chunk_rows: int
+) -> Iterator[tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Stream ``(raw_labels f64[c], indices i32[c, w], values f32[c, w])``.
+
+    ``w`` is the widest row *within the chunk* (at least 1); shorter rows
+    are left-aligned and padded with ``(0, 0.0)`` — exactly the global
+    padded layout's convention, so a downstream consumer that pads chunks
+    up to a common width reproduces :func:`load_libsvm` bit-for-bit.
+    Peak memory is one chunk, not the file.
+    """
+    if chunk_rows < 1:
+        raise ValueError(f"chunk_rows >= 1 required, got {chunk_rows}")
+    with open(path, "r") as f:
+        rows: list[tuple[float, list[int], list[float]]] = []
+        for row in iter_libsvm_rows(f):
+            rows.append(row)
+            if len(rows) == chunk_rows:
+                yield _pack_chunk(rows)
+                rows = []
+        if rows:
+            yield _pack_chunk(rows)
+
+
+def _pack_chunk(
+    rows: list[tuple[float, list[int], list[float]]]
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    c = len(rows)
+    w = max(1, max(len(ids) for _, ids, _ in rows))
+    labels = np.empty(c, dtype=np.float64)
+    indices = np.zeros((c, w), dtype=np.int32)
+    values = np.zeros((c, w), dtype=np.float32)
+    for i, (label, ids, vals) in enumerate(rows):
+        labels[i] = label
+        k = len(ids)
+        if k:
+            indices[i, :k] = ids
+            values[i, :k] = vals
+    return labels, indices, values
+
+
+def scan_libsvm(path: str, chunk_rows: int = 65536) -> LibSVMStats:
+    """The stats pass: parse everything, keep nothing but counters."""
+    n = 0
+    max_index = -1
+    nnz_max = 0
+    nnz_total = 0
+    label_values: set[float] = set()
+    with open(path, "r") as f:
+        for label, ids, vals in iter_libsvm_rows(f):
+            n += 1
+            label_values.add(label)
+            nnz_max = max(nnz_max, len(ids))
+            nnz_total += len(ids)
+            if ids:
+                max_index = max(max_index, max(ids))
+    return LibSVMStats(
+        num_instances=n,
+        max_index=max_index,
+        nnz_max=nnz_max,
+        nnz_total=nnz_total,
+        label_values=tuple(sorted(label_values)),
+    )
+
+
+def canonical_label_map(
+    label_values: tuple[float, ...]
+) -> Callable[[np.ndarray], np.ndarray]:
+    """The one deterministic raw-labels -> {-1, +1} float32 rule.
+
+    Decided from the file's GLOBAL label alphabet (see module docstring);
+    more than two values is an error — this repo is binary classification.
+    """
+    uniq = tuple(sorted(set(float(v) for v in label_values)))
+    if not uniq:
+        raise ValueError("no labels: cannot infer a label convention")
+    if len(uniq) > 2:
+        raise ValueError(
+            f"binary classification requires <= 2 label values, file has "
+            f"{len(uniq)}: {uniq[:5]}..."
+        )
+    if set(uniq) <= {-1.0, 1.0}:
+        positive = 1.0
+    elif set(uniq) <= {0.0, 1.0}:
+        positive = 1.0
+    elif len(uniq) == 2:
+        positive = uniq[1]
+    else:
+        raise ValueError(
+            f"cannot infer a binary label convention from the single label "
+            f"value {uniq[0]!r}; use -1/+1 or 0/1 coding"
+        )
+
+    def map_labels(raw: np.ndarray) -> np.ndarray:
+        return np.where(np.asarray(raw) == positive, 1.0, -1.0).astype(
+            np.float32
+        )
+
+    return map_labels
+
+
+def load_libsvm(path: str, *, dim: int | None = None, chunk_rows: int = 65536):
+    """One-shot ``path`` -> :class:`~repro.data.sparse.PaddedCSR`.
+
+    Built on :func:`iter_libsvm_chunks` — the exact arrays a streaming
+    consumer sees, concatenated — so the streamed-vs-oneshot equality
+    contract in :mod:`repro.data.pipeline` is against shared code, not a
+    second parser.  ``dim`` defaults to ``max index + 1``; passing the
+    true dimensionality matters when trailing features are absent from
+    the file (LibSVM files omit all-zero columns).
+    """
+    import jax.numpy as jnp
+
+    from repro.data.sparse import PaddedCSR
+
+    raw_labels: list[np.ndarray] = []
+    chunks: list[tuple[np.ndarray, np.ndarray]] = []
+    width = 1
+    max_index = -1
+    for labels, indices, values in iter_libsvm_chunks(path, chunk_rows):
+        raw_labels.append(labels)
+        chunks.append((indices, values))
+        width = max(width, indices.shape[1])
+        if indices.size:
+            # Padding ids are 0 and real ids nonnegative, so the plain max
+            # is the max stored id (or 0 for an all-empty chunk) — the
+            # same quantity scan_libsvm computes, clamped below at dim 1.
+            max_index = max(max_index, int(indices.max()))
+    if not raw_labels:
+        raise ValueError(f"{path}: no data rows")
+    if dim is None:
+        dim = max(max_index + 1, 1)
+    elif dim <= max_index:
+        raise ValueError(
+            f"dim={dim} but {path} stores feature id {max_index} (0-based)"
+        )
+    all_raw = np.concatenate(raw_labels)
+    mapper = canonical_label_map(tuple(np.unique(all_raw)))
+    indices = np.vstack(
+        [np.pad(i, ((0, 0), (0, width - i.shape[1]))) for i, _ in chunks]
+    )
+    values = np.vstack(
+        [np.pad(v, ((0, 0), (0, width - v.shape[1]))) for _, v in chunks]
+    )
+    return PaddedCSR(
+        indices=jnp.asarray(indices),
+        values=jnp.asarray(values),
+        labels=jnp.asarray(mapper(all_raw)),
+        dim=int(dim),
+    )
+
+
+def write_libsvm(path: str, data, *, comment: str | None = None) -> str:
+    """Write a :class:`~repro.data.sparse.PaddedCSR` as LibSVM text.
+
+    Only stored nonzeros are written (padding and explicit zeros are
+    indistinguishable in the padded layout — the documented invariant),
+    1-based, in each row's stored order.  Values go through ``repr`` of
+    the exact Python float, so parsing back yields the same float32 bits.
+    Labels that are whole numbers are written as integers (the
+    convention every LibSVM distribution uses).
+    """
+    indices = np.asarray(data.indices)
+    values = np.asarray(data.values)
+    labels = np.asarray(data.labels)
+    with open(path, "w") as f:
+        if comment:
+            f.write(f"# {comment}\n")
+        for i in range(indices.shape[0]):
+            row_mask = values[i] != 0.0
+            lab = float(labels[i])
+            parts = [str(int(lab)) if lab == int(lab) else repr(lab)]
+            parts.extend(
+                f"{int(idx) + 1}:{_fmt_value(val)}"
+                for idx, val in zip(indices[i, row_mask], values[i, row_mask])
+            )
+            f.write(" ".join(parts) + "\n")
+    return path
+
+
+def _fmt_value(v: np.floating) -> str:
+    """Shortest text that parses back to the same float32 bits."""
+    return repr(float(v))

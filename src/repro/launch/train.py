@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
-from repro.data.pipeline import PipelineConfig, batches
+from repro.data.token_stream import PipelineConfig, batches
 from repro.models import transformer
 from repro.optim import optimizers
 from repro.sharding.specs import unsharded_ctx

@@ -115,7 +115,7 @@ def test_save_extra_meta_roundtrip(tmp_path):
 
 def test_training_resumes_bitwise(tmp_path):
     """step -> save -> restore -> step  ==  step -> step."""
-    from repro.data.pipeline import PipelineConfig, batches
+    from repro.data.token_stream import PipelineConfig, batches
     from repro.train.loop import TrainSettings, make_train_step
 
     cfg = reduced_config(get_config("granite-moe-1b-a400m"))

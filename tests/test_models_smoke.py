@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs import ARCHS, get_config, reduced_config
 from repro.configs.base import ModelConfig
-from repro.data.pipeline import PipelineConfig, batches
+from repro.data.token_stream import PipelineConfig, batches
 from repro.models import transformer
 from repro.optim.optimizers import adamw
 from repro.sharding.specs import unsharded_ctx

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, INPUT_SHAPES, get_config, reduced_config
-from repro.data.pipeline import PipelineConfig, batches
+from repro.data.token_stream import PipelineConfig, batches
 from repro.launch.inputs import (
     decode_token_specs,
     prefill_batch_specs,
