@@ -68,15 +68,27 @@ def analytic_outer(method: str, spec, q: int, u: int = FD_BATCH,
         d=spec.dim,
         nnz=spec.nnz_per_instance,
         q=q,
-        u=u if method in ("fdsvrg", "serial") else 1,
+        # The FD mini-batch applies to the sampled-step methods that take
+        # it (fd_bcd steps are whole blocks, the baselines run u=1).
+        u=u if method in ("fdsvrg", "serial", "fd_saga") else 1,
         cluster=cluster,
     )
 
 
-def analytic_schedule(method: str, spec, q: int, outers: int, u: int = FD_BATCH):
-    """Cumulative (time, comm) after each outer iteration."""
-    t1, c1 = analytic_outer(method, spec, q, u)
-    return [((i + 1) * t1, (i + 1) * c1) for i in range(outers)]
+def analytic_schedule(method: str, spec, q: int, outers: int, u: int = FD_BATCH,
+                      cluster: ClusterModel = CLUSTER):
+    """Cumulative (time, comm) after each outer iteration, including any
+    one-time setup phase (fd_saga's gradient-table init; zero for every
+    other method)."""
+    t1, c1 = analytic_outer(method, spec, q, u, cluster)
+    t0, c0 = COSTS.init_cost(
+        method,
+        n=spec.num_instances,
+        nnz=spec.nnz_per_instance,
+        q=q,
+        cluster=cluster,
+    )
+    return [(t0 + (i + 1) * t1, c0 + (i + 1) * c1) for i in range(outers)]
 
 
 def measure_us(fn, repeats: int = 7) -> dict:

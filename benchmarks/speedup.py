@@ -32,7 +32,7 @@ def run(lam: float = 1e-4, outer_iters: int = 8, quick: bool = False):
         q = spec_full.default_workers
         res = {
             m: run_method(m, data, q, lam, outer_iters=outer_iters)
-            for m in ("fdsvrg", "dsvrg", "pslite_sgd")
+            for m in ("fdsvrg", "fd_saga", "fd_bcd", "dsvrg", "pslite_sgd")
         }
         star = best_objective(list(res.values()))
         times = {}
@@ -75,7 +75,15 @@ def run(lam: float = 1e-4, outer_iters: int = 8, quick: bool = False):
 
 
 def main():
-    path, rows, summary, reports = run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="smoke subset (news20 + webspam only) — the CI configuration",
+    )
+    args = ap.parse_args()
+    path, rows, summary, reports = run(quick=args.quick)
     print(f"speedup: wrote {len(rows)} rows to {path}")
     for name, times in summary.items():
         print(" ", name, {k: (round(v, 5) if v else None) for k, v in times.items()})

@@ -14,13 +14,16 @@ Three things, each a few lines of user code:
 """
 
 from repro.api import ExperimentSpec, FDSVRGClassifier, solve
-from repro.configs.fdsvrg_linear import CONFIGS
+from repro.configs.fdsvrg_linear import get_config
 from repro.core import losses
 from repro.data import datasets
 
 
 def main():
-    lc = CONFIGS["fdsvrg-news20"]
+    # get_config follows the registry's one-line error convention: a
+    # misspelled preset (or method= below) lists the valid names instead
+    # of surfacing a raw KeyError.
+    lc = get_config("fdsvrg-news20")
     data = datasets.load(lc.dataset)
     print(f"dataset {lc.dataset}: d={data.dim:,} N={data.num_instances:,} "
           f"(d/N={data.dim/data.num_instances:.0f} — the paper's regime)")

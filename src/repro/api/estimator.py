@@ -96,12 +96,16 @@ def as_padded_csr(X, y=None) -> PaddedCSR:
 
 
 class FDSVRGClassifier:
-    """Binary linear classifier trained by any registered solver.
+    """Linear classifier trained by any registered solver.
 
     Parameters mirror :class:`~repro.api.spec.ExperimentSpec`; the
     defaults are the registry's per-method ``"paper"`` operating point.
-    Labels may be any two values; they are mapped onto {-1, +1}
-    internally (sorted order) and mapped back by :meth:`predict`.
+    Labels may be any values: two classes are mapped onto {-1, +1}
+    internally (sorted order, bit-identical to the historical binary
+    path); three or more train one-vs-rest as a single multi-output run
+    ``w ∈ R^{d×k}`` (``coef_`` becomes sklearn's ``[k, d]`` and
+    :meth:`predict` takes the argmax margin) — which requires a method
+    with multi-output support (``serial``/``fdsvrg``).
     """
 
     def __init__(
@@ -191,13 +195,17 @@ class FDSVRGClassifier:
         )
 
     def _encode_labels(self, raw) -> np.ndarray:
-        """Map arbitrary binary labels (any dtype, including strings) onto
-        the {-1,+1} the losses expect, recording ``classes_``."""
+        """Map arbitrary labels (any dtype, including strings) onto what
+        the losses expect, recording ``classes_``: two classes become the
+        historical 1-D {-1,+1} coding (bit-identical to the binary path);
+        three or more become a one-vs-rest ``[N, k]`` sign matrix (column
+        j is +1 where the label is ``classes_[j]``), trained as one
+        multi-output run ``w ∈ R^{d×k}``."""
         raw = np.asarray(raw)
         classes = np.unique(raw)
-        if classes.size != 2:
+        if classes.size < 2:
             raise ValueError(
-                f"binary classification requires exactly 2 classes, got "
+                f"classification requires at least 2 classes, got "
                 f"{classes.size}"
             )
         if self.is_fitted and not np.array_equal(classes, self.classes_):
@@ -205,7 +213,11 @@ class FDSVRGClassifier:
                 f"classes {classes} differ from the fitted {self.classes_}"
             )
         self.classes_ = classes
-        return np.where(raw == classes[1], 1.0, -1.0).astype(np.float32)
+        if classes.size == 2:
+            return np.where(raw == classes[1], 1.0, -1.0).astype(np.float32)
+        return np.where(
+            raw[:, None] == classes[None, :], 1.0, -1.0
+        ).astype(np.float32)
 
     def _encoded_data(self, X, y) -> PaddedCSR:
         """The training PaddedCSR with ±1 labels.  Labels are encoded
@@ -268,10 +280,17 @@ class FDSVRGClassifier:
         data = self._encoded_data(_coerce_input(X), y)
         if not hasattr(self, "history_"):
             self.history_ = []
-        init_w = jnp.asarray(self.coef_) if self.is_fitted else None
+        if self.is_fitted:
+            # Multiclass stores sklearn's [k, d]; the drivers run [d, k].
+            init_w = jnp.asarray(
+                self.coef_.T if self.coef_.ndim == 2 else self.coef_
+            )
+        else:
+            init_w = None
         result = solve(self._spec(data, outer_iters, init_w))
         self._fits += 1
-        self.coef_ = np.asarray(result.w)
+        w = np.asarray(result.w)
+        self.coef_ = w.T if w.ndim == 2 else w
         self.n_features_in_ = (
             data.stats().dim if is_source(data) else data.dim
         )
@@ -316,18 +335,26 @@ class FDSVRGClassifier:
         """
         self._check_fitted()
         X = _coerce_input(X)
-        if is_source(X):
-            return streamed_margins(
-                X, self.coef_, chunk_rows=self.ingest_chunk_rows
+        if self.coef_.ndim == 2:
+            # One-vs-rest: a [n, k] margin matrix, one column per class.
+            return np.column_stack(
+                [self._binary_margins(X, w_j) for w_j in self.coef_]
             )
+        return self._binary_margins(X, self.coef_)
+
+    def _binary_margins(self, X, w) -> np.ndarray:
+        if is_source(X):
+            return streamed_margins(X, w, chunk_rows=self.ingest_chunk_rows)
         if isinstance(X, PaddedCSR):
-            return np.asarray(margins(X, jnp.asarray(self.coef_)))
-        X = np.asarray(X)
-        return X @ self.coef_
+            return np.asarray(margins(X, jnp.asarray(w)))
+        return np.asarray(X) @ w
 
     def predict(self, X) -> np.ndarray:
         self._check_fitted()
-        return self.classes_[(self.decision_function(X) > 0).astype(int)]
+        df = self.decision_function(X)
+        if df.ndim == 2:
+            return self.classes_[np.argmax(df, axis=1)]
+        return self.classes_[(df > 0).astype(int)]
 
     def score(self, X, y=None) -> float:
         """Mean accuracy on ``(X, y)``.  ``y=None`` uses a PaddedCSR's (or

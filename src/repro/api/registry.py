@@ -31,6 +31,8 @@ Method names (the seven drivers; the async pair shares one driver):
 ``synsvrg``           SynSVRG on a parameter server (App. B)
 ``asysvrg``           AsySVRG on a parameter server (App. B)
 ``pslite_sgd``        PS-Lite asynchronous SGD (no variance reduction)
+``fd_saga``           FD-SAGA update rule (replicated n-float table)
+``fd_bcd``            Distributed block coordinate descent (L1 baseline)
 ====================  ====================================================
 
 New methods register with :func:`register_method`; nothing else in the
@@ -60,6 +62,7 @@ from repro.core.partition import balanced
 from repro.data import datasets
 from repro.data.pipeline import as_source, is_source
 from repro.dist import SimBackend, make_mesh
+from repro.optim.update_rules import BCDRule, SAGARule, make_context, run_with_rule
 
 #: Cap on inner steps per outer for the scaled trajectories of the largest
 #: sets (url/kdd) — subsampled epochs, noted in EXPERIMENTS.md.
@@ -86,11 +89,13 @@ class MethodInfo:
     # Can run from streamed per-worker slabs alone (spec.source=...),
     # never touching a global PaddedCSR.
     supports_streaming: bool = False
+    # Accepts a [N, k] label matrix (w ∈ R^{d×k}, one-vs-rest multiclass).
+    supports_multi_output: bool = False
     # "paper" auto-default operating point (tuned on the scaled sets,
     # fixed like the paper; lifted from benchmarks/common.py):
     paper_eta: float = 1.0
     paper_batch: int = 1
-    inner_rule: str = "n"  # "n" | "n_over_u" | "n_over_q"
+    inner_rule: str = "n"  # "n" | "n_over_u" | "n_over_q" | "q"
     summary: str = ""
 
 
@@ -118,6 +123,7 @@ def register_method(
     needs_mesh: bool = False,
     supports_checkpoint: bool = False,
     supports_streaming: bool = False,
+    supports_multi_output: bool = False,
     paper_eta: float,
     paper_batch: int = 1,
     inner_rule: str,
@@ -129,7 +135,7 @@ def register_method(
     spec, the loaded data set, the resolved numeric parameters, and (for
     ``needs_mesh`` methods) the mesh — and returns a ``RunResult``.
     """
-    if inner_rule not in ("n", "n_over_u", "n_over_q"):
+    if inner_rule not in ("n", "n_over_u", "n_over_q", "q"):
         raise ValueError(f"unknown inner_rule {inner_rule!r}")
 
     def deco(fn: Callable) -> Callable:
@@ -146,6 +152,7 @@ def register_method(
             needs_mesh=needs_mesh,
             supports_checkpoint=supports_checkpoint,
             supports_streaming=supports_streaming,
+            supports_multi_output=supports_multi_output,
             paper_eta=paper_eta,
             paper_batch=paper_batch,
             inner_rule=inner_rule,
@@ -227,6 +234,19 @@ def _validate(spec: ExperimentSpec, info: MethodInfo) -> None:
             "checkpoint_dir would be silently ignored; it fails here so a "
             "run that believes it is durable actually is."
         )
+    labels = getattr(spec.data, "labels", None)
+    if (
+        labels is not None
+        and getattr(labels, "ndim", 1) == 2
+        and labels.shape[1] > 1
+        and not info.supports_multi_output
+    ):
+        raise ValueError(
+            f"method {info.name!r} does not support multi-output labels "
+            f"(got a [N, {labels.shape[1]}] label matrix; multi-output "
+            f"methods: "
+            f"{', '.join(sorted(m for m, i in METHODS.items() if i.supports_multi_output))})"
+        )
 
 
 def _resolve(
@@ -240,6 +260,9 @@ def _resolve(
             m = min(max(1, n // u), PAPER_MAX_INNER)
         elif info.inner_rule == "n_over_q":
             m = min(max(1, n // q), PAPER_MAX_INNER)
+        elif info.inner_rule == "q":
+            # One cycle over the feature blocks per outer (BCD).
+            m = min(max(1, q), PAPER_MAX_INNER)
         else:  # "n"
             m = min(n, PAPER_MAX_INNER)
     else:
@@ -310,6 +333,7 @@ def capability_matrix() -> list[dict]:
             "mesh": i.needs_mesh,
             "checkpoint": i.supports_checkpoint,
             "streaming": i.supports_streaming,
+            "multi_output": i.supports_multi_output,
             "paper_eta": i.paper_eta,
             "paper_batch": i.paper_batch,
             "inner_rule": i.inner_rule,
@@ -359,6 +383,7 @@ def _source_slabs(spec: ExperimentSpec, source, q: int):
 @register_method(
     "serial", backend="none", supports_kernels=True, supports_lazy=True,
     supports_checkpoint=True, supports_streaming=True,
+    supports_multi_output=True,
     paper_eta=2.0, inner_rule="n",
     summary="Algorithm 2 (serial SVRG), the proof reference",
 )
@@ -379,6 +404,7 @@ def _solve_serial(spec, data, p, mesh) -> RunResult:
 @register_method(
     "fdsvrg", backend="sim", supports_kernels=True, supports_lazy=True,
     supports_checkpoint=True, supports_streaming=True,
+    supports_multi_output=True,
     paper_eta=2.0, paper_batch=PAPER_FD_BATCH, inner_rule="n_over_u",
     summary="Algorithm 1 (FD-SVRG), jitted metered simulation",
 )
@@ -483,3 +509,36 @@ _register_baseline(
     supports_option_ii=False,
     summary="PS-Lite asynchronous SGD, no variance reduction",
 )
+
+
+# -- update-rule methods: a registration, not a new driver -------------------
+
+
+@register_method(
+    "fd_saga", backend="sim", supports_kernels=False,
+    supports_option_ii=False,  # SAGA has no Option I/II step mask
+    paper_eta=1.0, paper_batch=PAPER_FD_BATCH, inner_rule="n_over_u",
+    summary="FD-SAGA: feature-distributed SAGA, replicated n-float table",
+)
+def _solve_fd_saga(spec, data, p, mesh) -> RunResult:
+    block = BLOCK_CACHE.get(data, p.q)
+    ctx = make_context(
+        block, losses_lib.LOSSES[spec.loss], spec.reg,
+        _svrg_config(spec, p), backend=SimBackend(p.q, spec.cluster),
+    )
+    return run_with_rule(SAGARule(), ctx, init_w=spec.init_w)
+
+
+@register_method(
+    "fd_bcd", backend="sim", supports_kernels=False,
+    supports_option_ii=False,  # deterministic block cycling, no step mask
+    paper_eta=1.0, inner_rule="q",
+    summary="Distributed block coordinate descent (Mahajan et al.), L1 baseline",
+)
+def _solve_fd_bcd(spec, data, p, mesh) -> RunResult:
+    block = BLOCK_CACHE.get(data, p.q)
+    ctx = make_context(
+        block, losses_lib.LOSSES[spec.loss], spec.reg,
+        _svrg_config(spec, p), backend=SimBackend(p.q, spec.cluster),
+    )
+    return run_with_rule(BCDRule(), ctx, init_w=spec.init_w)

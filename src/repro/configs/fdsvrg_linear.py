@@ -57,6 +57,18 @@ class LinearConfig:
         return ExperimentSpec(**kw)
 
 
+def get_config(name: str) -> LinearConfig:
+    """CONFIGS lookup with the registry's one-line error convention —
+    a misspelled preset fails with the valid names, not a raw KeyError."""
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown config {name!r}; available configs: "
+            f"{', '.join(sorted(CONFIGS))}"
+        ) from None
+
+
 CONFIGS = {
     "fdsvrg-news20": LinearConfig("fdsvrg-news20", "news20", workers=8),
     "fdsvrg-url": LinearConfig("fdsvrg-url", "url"),

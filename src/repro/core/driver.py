@@ -184,18 +184,22 @@ def make_same_iterate_eval(
 
 
 def resolve_init_w(
-    init_w: jax.Array | None, dim: int, dtype
+    init_w: jax.Array | None, dim: int, dtype, num_outputs: int = 1
 ) -> jax.Array:
     """The starting iterate every driver shares: zeros unless the caller
     warm-starts (``repro.api`` threads ``FDSVRGClassifier.partial_fit``'s
     coefficients through here), always in the data's dtype so a warm
-    start can't silently promote a float32 run to float64."""
+    start can't silently promote a float32 run to float64.
+    ``num_outputs > 1`` is the multi-output shape ``w ∈ R^{d×k}``
+    (one-vs-rest / multivariate squared loss); ``1`` keeps the historical
+    1-D iterate bit-for-bit."""
+    shape = (dim,) if num_outputs == 1 else (dim, num_outputs)
     if init_w is None:
-        return jnp.zeros((dim,), dtype=dtype)
+        return jnp.zeros(shape, dtype=dtype)
     init_w = jnp.asarray(init_w, dtype=dtype)
-    if init_w.shape != (dim,):
+    if init_w.shape != shape:
         raise ValueError(
-            f"init_w has shape {init_w.shape}, expected ({dim},)"
+            f"init_w has shape {init_w.shape}, expected {shape}"
         )
     return init_w
 

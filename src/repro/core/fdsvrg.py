@@ -614,54 +614,15 @@ def run_serial_svrg(
         )
     # Everything below reads the block layout only — a streamed build
     # (repro.data.pipeline.stream_block_csr) runs without the global
-    # PaddedCSR ever existing.
-    labels = block_data.labels
-    n = block_data.num_instances
-    block_dims = block_data.block_dims
-    kernel_lams = _kernel_lams(reg, use_kernels)
-    corrections = _lazy_corrections(
-        block_data, n, cfg.batch_size, lazy_updates
-    )
+    # PaddedCSR ever existing.  The SVRG inner step itself lives in the
+    # update-rule layer now; lazy import keeps the graph acyclic
+    # (repro.core.__init__ imports this module eagerly).
+    from repro.optim.update_rules import SVRGRule, make_context, run_with_rule
 
-    def snapshot(w):
-        return _full_grad_blocks(
-            block_data.indices, block_data.values, labels, w,
-            loss.name, block_dims, use_kernels,
-        )
-
-    def epoch(t, rng, w, z_data, s0, eta_scale=1.0):
-        # eta stays a traced operand, so divergence backoff (eta_scale
-        # < 1) reuses the compiled scan; eta * 1.0 is bit-exact on the
-        # default path.
-        eta = cfg.eta * eta_scale
-        samples = draw_samples(rng, n, cfg.inner_steps, cfg.batch_size)
-        mask = option_mask(rng, cfg.inner_steps, cfg.option)
-        if lazy_updates is not None:
-            return _lazy_inner_epoch(
-                block_data.indices, block_data.values, labels,
-                w, z_data, s0,
-                jnp.asarray(samples), eta, jnp.asarray(mask),
-                corrections, loss.name, reg.name, reg.lam, block_dims,
-                use_kernels, lazy_updates, lam2=reg.lam2,
-                kernel_lams=kernel_lams,
-            )
-        return _inner_epoch(
-            block_data.indices, block_data.values, labels,
-            w, z_data, s0,
-            jnp.asarray(samples), eta, jnp.asarray(mask),
-            loss.name, reg.name, reg.lam, block_dims, use_kernels,
-            lam2=reg.lam2, kernel_lams=kernel_lams,
-        )
-
-    return run_outer_loop(
-        outer_iters=cfg.outer_iters,
-        seed=cfg.seed,
-        init_w=resolve_init_w(
-            init_w, block_data.dim, block_data.values[0].dtype
-        ),
-        snapshot=snapshot,
-        epoch=epoch,
-        evaluate=make_same_iterate_eval(labels, loss, reg, cfg.eta),
+    return run_with_rule(
+        SVRGRule(use_kernels=use_kernels, lazy_updates=lazy_updates),
+        make_context(block_data, loss, reg, cfg),
+        init_w=init_w,
         recovery=recovery,
         checkpoint=checkpoint,
     )
@@ -723,69 +684,17 @@ def run_fdsvrg(
         block_data = BlockCSR.from_padded(data, partition)
     elif block_data.partition.bounds != partition.bounds:
         raise ValueError("block_data was built for a different partition")
-    labels = block_data.labels
-    block_dims = block_data.block_dims
-    kernel_lams = _kernel_lams(reg, use_kernels)
-    # Cost accounting reads only slab metadata, so modeled time matches
-    # the in-memory path bit-for-bit (global_nnz_max is carried by both).
-    n, u, nnz = (
-        block_data.num_instances,
-        cfg.batch_size,
-        block_data.global_nnz_max(),
-    )
-    corrections = _lazy_corrections(block_data, n, u, lazy_updates)
+    # The SVRG inner step, its metering, and the default abort hook all
+    # live in the update-rule layer now (lazy import: repro.core.__init__
+    # imports this module eagerly, so a module-level import back into
+    # repro.optim would see a partially-initialized module).
+    from repro.optim.update_rules import SVRGRule, make_context, run_with_rule
 
-    def snapshot(w):
-        return _full_grad_blocks(
-            block_data.indices, block_data.values, labels, w,
-            loss.name, block_dims, use_kernels,
-        )
-
-    def epoch(t, rng, w, z_data, s0, eta_scale=1.0):
-        # --- full-gradient phase (Alg 1 lines 3-5): account the snapshot
-        # gradient this outer iteration consumes ---
-        backend.meter_tree(payload=n)
-        backend.charge_cost(COSTS.fd_fullgrad(n=n, nnz=nnz, q=q))
-
-        eta = cfg.eta * eta_scale  # traced; bit-exact when eta_scale == 1
-        samples = draw_samples(rng, n, cfg.inner_steps, u)
-        mask = option_mask(rng, cfg.inner_steps, cfg.option)
-        if lazy_updates is not None:
-            w = _lazy_inner_epoch(
-                block_data.indices, block_data.values, labels,
-                w, z_data, s0,
-                jnp.asarray(samples), eta, jnp.asarray(mask),
-                corrections, loss.name, reg.name, reg.lam, block_dims,
-                use_kernels, lazy_updates, lam2=reg.lam2,
-                kernel_lams=kernel_lams,
-            )
-        else:
-            w = _inner_epoch(
-                block_data.indices, block_data.values, labels,
-                w, z_data, s0,
-                jnp.asarray(samples), eta, jnp.asarray(mask),
-                loss.name, reg.name, reg.lam, block_dims, use_kernels,
-                lam2=reg.lam2, kernel_lams=kernel_lams,
-            )
-        # --- inner-loop communication (Alg 1 lines 9-11): one tree round
-        # per mini-batch of u margins; M steps total (metered in aggregate).
-        backend.meter_tree(payload=u, steps=cfg.inner_steps)
-        backend.charge_cost(
-            COSTS.fd_inner_step(nnz=nnz, q=q, u=u), steps=cfg.inner_steps
-        )
-        return w
-
-    return run_outer_loop(
-        outer_iters=cfg.outer_iters,
-        seed=cfg.seed,
-        init_w=resolve_init_w(
-            init_w, block_data.dim, block_data.values[0].dtype
-        ),
-        snapshot=snapshot,
-        epoch=epoch,
-        evaluate=make_same_iterate_eval(labels, loss, reg, cfg.eta),
-        backend=backend,
-        recovery=_with_default_abort(recovery, n, nnz, q),
+    return run_with_rule(
+        SVRGRule(use_kernels=use_kernels, lazy_updates=lazy_updates),
+        make_context(block_data, loss, reg, cfg, backend=backend),
+        init_w=init_w,
+        recovery=recovery,
         checkpoint=checkpoint,
     )
 

@@ -93,7 +93,31 @@ hinge = MarginLoss(
 )
 
 
-LOSSES = {l.name: l for l in (logistic, squared_hinge, hinge)}
+def _squared_value(s: jax.Array, y: jax.Array) -> jax.Array:
+    r = s - y
+    return 0.5 * r * r
+
+
+def _squared_dvalue(s: jax.Array, y: jax.Array) -> jax.Array:
+    return s - y
+
+
+# Squared loss on the margin: least-squares regression against the (not
+# necessarily ±1) target y.  This is the multi-output workhorse — with
+# w ∈ R^{d×k} and a [N, k] target matrix, each output column is an
+# independent least-squares problem sharing one data matrix (and, in the
+# FD drivers, one margin tree per sampled batch).  For y ∈ {-1, +1} it is
+# the classic least-squares classifier, so it also drives one-vs-rest
+# multiclass through the estimator.
+squared = MarginLoss(
+    name="squared",
+    value=_squared_value,
+    dvalue=_squared_dvalue,
+    smoothness=1.0,
+)
+
+
+LOSSES = {l.name: l for l in (logistic, squared_hinge, hinge, squared)}
 
 
 def soft_threshold(v: jax.Array, t: jax.Array | float) -> jax.Array:

@@ -23,6 +23,14 @@ digest moves, the old entry is simply never looked up again.
 
 Writes are atomic (build into a temp dir, ``os.replace`` into place), so
 a crashed build never leaves a half-entry that a later run would trust.
+
+Slabs are stored compressed (``np.savez_compressed``) with trailing
+all-padding lanes trimmed on write and re-padded on load: the padded
+layout rounds every worker's lane count up to its block's max (often a
+``lane_multiple`` of 8/128 for the kernels), so the tail lanes of most
+slabs are pure ``(index 0, value 0.0)`` padding — bytes that deflate
+poorly at scale but trim for free.  The full lane count is stored per
+slab, so the loaded arrays are byte-identical to what was saved.
 """
 
 from __future__ import annotations
@@ -44,7 +52,27 @@ from repro.data.pipeline import (
     stream_block_slab,
 )
 
-CACHE_VERSION = 1
+# v2: compressed slabs with trailing padding lanes trimmed (+ "lanes" key
+# per slab).  v1 entries fail the manifest version check and are rebuilt.
+CACHE_VERSION = 2
+
+
+def _trim_padding_lanes(
+    indices: np.ndarray, values: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Drop trailing lanes that are pure padding in EVERY row.
+
+    A padding slot is exactly ``(index 0, value 0.0)`` — explicit zero
+    values with a real index (kept by some layouts) and index-0 entries
+    with a real value both count as data, so only true padding is
+    trimmed.  At least one lane is always kept (the empty-matrix case)."""
+    used = (indices != 0) | (values != 0)
+    lane_used = used.any(axis=0) if indices.size else np.zeros(0, dtype=bool)
+    if lane_used.any():
+        keep = int(np.max(np.nonzero(lane_used)[0])) + 1
+    else:
+        keep = min(1, indices.shape[1])
+    return indices[:, :keep], values[:, :keep]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,11 +111,16 @@ def save_block_csr(
         labels = np.asarray(block_data.labels)
         np.save(os.path.join(tmp, "labels.npy"), labels)
         for l in range(block_data.num_blocks):
-            np.savez(
+            indices = np.asarray(block_data.indices[l])
+            values = np.asarray(block_data.values[l])
+            t_indices, t_values = _trim_padding_lanes(indices, values)
+            np.savez_compressed(
                 os.path.join(tmp, f"slab_{l:04d}.npz"),
-                indices=np.asarray(block_data.indices[l]),
-                values=np.asarray(block_data.values[l]),
+                indices=t_indices,
+                values=t_values,
                 nnz_col=np.asarray(block_data.nnz_col_block(l)),
+                # Full padded lane count, so the load re-pads exactly.
+                lanes=np.int64(indices.shape[1]),
             )
         manifest = {
             "version": CACHE_VERSION,
@@ -138,8 +171,16 @@ def load_block_csr(
         if not os.path.isfile(slab_path):
             return None
         with np.load(slab_path) as slab:
-            block_indices.append(jnp.asarray(slab["indices"]))
-            block_values.append(jnp.asarray(slab["values"]))
+            indices = slab["indices"]
+            values = slab["values"]
+            lanes = int(slab["lanes"])
+            if indices.shape[1] < lanes:
+                # Restore the trimmed trailing padding lanes (zeros).
+                pad = ((0, 0), (0, lanes - indices.shape[1]))
+                indices = np.pad(indices, pad)
+                values = np.pad(values, pad)
+            block_indices.append(jnp.asarray(indices))
+            block_values.append(jnp.asarray(values))
             block_nnz_col.append(jnp.asarray(slab["nnz_col"]))
     labels = np.load(os.path.join(entry, "labels.npy"))
     return BlockCSR(

@@ -60,21 +60,66 @@ class CostModel:
 
     # -- FD-SVRG (Algorithm 1; serial SVRG is the q = 1 specialization) --
 
-    def fd_fullgrad(self, *, n: int, nnz: int, q: int) -> PhaseCost:
+    def fd_fullgrad(self, *, n: int, nnz: int, q: int, k: int = 1) -> PhaseCost:
         """Full-gradient phase (Alg 1 lines 3-5): per-worker margins +
-        scatter over the local block, one N-payload tree."""
+        scatter over the local block, one N-payload tree.  ``k`` is the
+        multi-output width (w ∈ R^{d×k}): per-nonzero work and the tree
+        payload both scale by k, the round count does not (the k margin
+        vectors ride one tree)."""
+        return PhaseCost(
+            flops=4.0 * n * nnz * k / q,
+            scalars=2 * q * n * k if q > 1 else 0,
+            rounds=tree_rounds(q),
+        )
+
+    def fd_inner_step(self, *, nnz: int, q: int, u: int, k: int = 1) -> PhaseCost:
+        """One inner step (Alg 1 lines 9-11): per-worker sparse work on
+        the sampled rows' local entries, one u-payload tree (u·k scalars
+        for multi-output — see :meth:`fd_fullgrad`)."""
+        return PhaseCost(
+            flops=2.0 * u * nnz * k / q,
+            scalars=2 * q * u * k if q > 1 else 0,
+            rounds=tree_rounds(q),
+        )
+
+    # -- FD-SAGA (feature-distributed SAGA, replicated scalar table) -----
+
+    def fd_saga_init(self, *, n: int, nnz: int, q: int) -> PhaseCost:
+        """Table initialization (once per run, not per outer): one
+        full-gradient-shaped pass sets the n-float margin-derivative
+        table α and its running mean z — the table is *scalars per
+        instance*, so replicating it costs one N-payload tree, same wire
+        shape as the FD-SVRG full-gradient phase (never an O(d)
+        gradient table per worker)."""
         return PhaseCost(
             flops=4.0 * n * nnz / q,
             scalars=2 * q * n if q > 1 else 0,
             rounds=tree_rounds(q),
         )
 
-    def fd_inner_step(self, *, nnz: int, q: int, u: int) -> PhaseCost:
-        """One inner step (Alg 1 lines 9-11): per-worker sparse work on
-        the sampled rows' local entries, one u-payload tree."""
+    def fd_saga_step(self, *, nnz: int, q: int, u: int) -> PhaseCost:
+        """One FD-SAGA inner step: margins gather + direction scatter +
+        table-mean scatter on the sampled rows' local entries (3 sparse
+        passes vs FD-SVRG's 2 — SAGA folds its snapshot maintenance into
+        every step), one u-payload tree exactly like the SVRG step."""
         return PhaseCost(
-            flops=2.0 * u * nnz / q,
+            flops=6.0 * u * nnz / q,
             scalars=2 * q * u if q > 1 else 0,
+            rounds=tree_rounds(q),
+        )
+
+    # -- FD-BCD (distributed block coordinate descent, Mahajan et al.) ---
+
+    def fd_bcd_step(self, *, n: int, nnz: int, q: int) -> PhaseCost:
+        """One BCD block update: the active worker scatters the full data
+        gradient restricted to its block (all N rows' local entries) and
+        re-computes its block's margin delta, then the delta is
+        tree-replicated so every worker's maintained margins stay
+        consistent — an N-payload tree per step, the price BCD pays for
+        updating whole blocks instead of sampled rows."""
+        return PhaseCost(
+            flops=4.0 * n * nnz / q,
+            scalars=2 * q * n if q > 1 else 0,
             rounds=tree_rounds(q),
         )
 
@@ -158,6 +203,17 @@ class CostModel:
                 self.seconds(cl, fg) + m * self.seconds(cl, st),
                 fg.scalars + m * st.scalars,
             )
+        if method == "fd_saga":
+            m = inner_steps if inner_steps is not None else max(1, n // u)
+            st = self.fd_saga_step(nnz=nnz, q=q, u=u)
+            # Steady-state per-outer cost; the one-time table init is
+            # :meth:`init_cost` (the drift guard pins meter == init +
+            # outers * this).
+            return m * self.seconds(cl, st), m * st.scalars
+        if method == "fd_bcd":
+            m = inner_steps if inner_steps is not None else max(1, q)
+            st = self.fd_bcd_step(n=n, nnz=nnz, q=q)
+            return m * self.seconds(cl, st), m * st.scalars
         if method == "dsvrg":
             m = inner_steps if inner_steps is not None else max(1, n // q)
             fg = self.dsvrg_fullgrad(n=n, d=d, nnz=nnz, q=q)
@@ -183,7 +239,29 @@ class CostModel:
                 time_s += self.seconds(cl, fg)
                 scalars += fg.scalars
             return time_s, scalars
-        raise ValueError(method)
+        raise ValueError(
+            f"unknown method {method!r} in CostModel.outer_cost; methods "
+            "with closed forms: serial, fdsvrg, fd_saga, fd_bcd, dsvrg, "
+            "synsvrg, asysvrg, pslite_sgd"
+        )
+
+    def init_cost(
+        self,
+        method: str,
+        *,
+        n: int,
+        nnz: int,
+        q: int,
+        cluster: ClusterModel | None = None,
+    ) -> tuple[float, int]:
+        """(modeled seconds, scalars) charged ONCE per run, before the
+        per-outer schedule — zero for every method except ``fd_saga``,
+        whose gradient-table initialization is a one-time full-gradient-
+        shaped phase (:meth:`fd_saga_init`)."""
+        if method == "fd_saga":
+            cost = self.fd_saga_init(n=n, nnz=nnz, q=q)
+            return self.seconds(cluster or ClusterModel(), cost), cost.scalars
+        return 0.0, 0
 
 
 #: The shared instance every driver and benchmark consumes.

@@ -454,6 +454,66 @@ def test_cache_load_rejects_version_and_digest_mismatch(tmp_path):
     assert load_block_csr(cache, src.digest(), part) is None
 
 
+def test_cache_slabs_compressed_and_trimmed(tmp_path):
+    """v2 format: slabs are deflated npz with trailing all-padding lanes
+    dropped on disk, and the load re-pads to the exact in-memory layout."""
+    import zipfile
+
+    data = _data(seed=27)
+    cache = str(tmp_path / "cache")
+    part = balanced(data.dim, 2)
+    # lane_multiple=8 rounds every slab's lane count up, guaranteeing
+    # trailing pure-padding lanes for the trim to remove
+    cold = get_or_build(ArraySource(data), part, cache_dir=cache,
+                        lane_multiple=8)
+    trimmed_any = False
+    for l in range(2):
+        slab_path = os.path.join(cold.path, f"slab_{l:04d}.npz")
+        with zipfile.ZipFile(slab_path) as zf:
+            assert all(i.compress_type == zipfile.ZIP_DEFLATED
+                       for i in zf.infolist())
+        with np.load(slab_path) as slab:
+            lanes = int(slab["lanes"])
+            assert lanes == np.asarray(cold.data.indices[l]).shape[1]
+            assert slab["indices"].shape == slab["values"].shape
+            assert slab["indices"].shape[1] <= lanes
+            trimmed_any |= slab["indices"].shape[1] < lanes
+    assert trimmed_any  # the rounded-up lanes really were dropped on disk
+    warm = get_or_build(ArraySource(data), part, cache_dir=cache,
+                        lane_multiple=8)
+    assert warm.status == "warm"
+    _assert_blocks_equal(warm.data, cold.data)
+
+
+def test_cache_old_format_version_is_rebuilt(tmp_path, monkeypatch):
+    """A v1-era entry (uncompressed, no lane trim) is never trusted: the
+    format version is part of the key, so the current code cold-rebuilds
+    beside it — and even a same-key manifest claiming an old version is
+    refused by the load."""
+    import json
+
+    from repro.data import ingest_cache
+
+    data = _data(seed=28)
+    cache = str(tmp_path / "cache")
+    src = ArraySource(data)
+    part = balanced(data.dim, 2)
+    monkeypatch.setattr(ingest_cache, "CACHE_VERSION", 1)
+    old = get_or_build(src, part, cache_dir=cache)
+    assert old.status == "cold"
+    monkeypatch.undo()
+    new = get_or_build(src, part, cache_dir=cache)
+    assert new.status == "cold" and new.path != old.path
+    _assert_blocks_equal(new.data, old.data)
+    manifest = os.path.join(new.path, "manifest.json")
+    with open(manifest) as f:
+        m = json.load(f)
+    m["version"] = 1
+    with open(manifest, "w") as f:
+        json.dump(m, f)
+    assert load_block_csr(cache, src.digest(), part) is None
+
+
 # ---------------------------------------------------------------------------
 # solve(): source= vs data= bit-parity end to end
 # ---------------------------------------------------------------------------
