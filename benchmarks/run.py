@@ -25,6 +25,7 @@ def main() -> None:
         chaos_bench,
         convergence,
         ingest_bench,
+        serve_bench,
         kernels_bench,
         lambda_sensitivity,
         lazy_bench,
@@ -135,6 +136,21 @@ def main() -> None:
     )
     write_bench_json(
         "ingest", ingest_bench.report_payload(ingest_summary, us, args.quick)
+    )
+
+    t = time.perf_counter()
+    _, rows, serve_summary = serve_bench.run(quick=args.quick)
+    for r in rows:
+        print(",".join(map(str, r)))
+    us = stamp(
+        "serve_total", t,
+        f"{serve_summary['throughput']['predictions_per_s']:.0f}pred/s;"
+        f"p99={serve_summary['latency_ms']['p99_ms']:.2f}ms;"
+        f"shapes={serve_summary['shapes']['compiled_shapes']};"
+        f"bitwise={all(serve_summary['bitwise'].values())}",
+    )
+    write_bench_json(
+        "serve", serve_bench.report_payload(serve_summary, us, args.quick)
     )
 
     t = time.perf_counter()

@@ -1,0 +1,237 @@
+"""Serving benchmark: batched sparse inference + online partial_fit.
+
+What it measures and certifies (the numbers land in BENCH_serve.json):
+
+* **throughput** — predictions/s through the `MicroBatcher ->
+  PredictionEngine` path (engine compute only, and end-to-end with the
+  interleaved training included);
+* **latency** — p50/p99 request latency, enqueue to served (so it
+  includes the batching delay the deadline policy bounds);
+* **bounded shapes** — the flushed-bucket histogram and the engine's
+  compiled-shape meter: the shape universe must stay within the
+  ``log2(max_batch) * log2(max_width)`` bound the batcher constructs;
+* **staleness** — versions published mid-stream and the per-request
+  staleness histogram (batches pinned pre-publish serve with the old
+  snapshot and report staleness 1);
+* **bitwise serving** — engine margins equal ``FDSVRGClassifier.
+  decision_function`` on the same rows, jnp path AND Pallas kernel
+  path, re-proven on the benchmark's own traffic.
+
+Standalone entry point with a ``--quick`` smoke mode for CI:
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
+
+writes results/benchmarks/serve.csv and BENCH_serve.json, and exits
+non-zero if a certified contract (bitwise equality, bounded shapes,
+interleaving actually happened) fails — CI treats a regression here as
+a build break.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import numpy as np
+
+from benchmarks.common import ensure_dir, write_bench_json, write_csv
+from repro.api import FDSVRGClassifier
+from repro.data.sparse import PaddedCSR
+from repro.serve import (
+    MicroBatcher,
+    PredictionEngine,
+    run_serve_loop,
+    synthetic_request_source,
+)
+
+
+def _traffic(quick: bool):
+    if quick:
+        return dict(dim=2_048, num_requests=2_000, nnz_lo=2, nnz_hi=32)
+    return dict(dim=65_536, num_requests=20_000, nnz_lo=2, nnz_hi=64)
+
+
+def _warm_classifier(stream, n_warm: int) -> FDSVRGClassifier:
+    data = stream.materialize()
+    warm = PaddedCSR(
+        indices=data.indices[:n_warm],
+        values=data.values[:n_warm],
+        labels=data.labels[:n_warm],
+        dim=data.dim,
+    )
+    clf = FDSVRGClassifier(
+        method="serial", eta=0.3, lam=1e-3, inner_steps=32, outer_iters=1
+    )
+    clf.fit(warm)
+    return clf
+
+
+def _bitwise_gate(stream, clf) -> dict:
+    """Engine == decision_function on this benchmark's rows, both paths."""
+    data = stream.materialize()
+    out = {}
+    for use_kernels in (False, True):
+        clf.use_kernels = use_kernels
+        engine = PredictionEngine.from_estimator(clf, use_kernels=use_kernels)
+        got = engine.margins(data.indices, data.values)
+        want = clf.decision_function(data)
+        key = "kernel" if use_kernels else "jnp"
+        out[f"engine_equals_decision_function_{key}"] = bool(
+            np.array_equal(got, want)
+        )
+    clf.use_kernels = False
+    return out
+
+
+def run(quick: bool = False):
+    cfg = _traffic(quick)
+    max_batch = 128 if quick else 256
+    min_width = 8
+    chunk_rows = 200 if quick else 500
+    update_every = 2
+
+    stream = synthetic_request_source(seed=11, **cfg)
+    clf = _warm_classifier(stream, n_warm=chunk_rows)
+    rows: list[list] = []
+
+    # bitwise gates first (cheap, and everything else is meaningless if
+    # the engine doesn't serve the estimator's numbers)
+    t = time.perf_counter()
+    gates = _bitwise_gate(stream, clf)
+    t_gate = time.perf_counter() - t
+    rows.append(["serve_bitwise_gate", f"{t_gate * 1e6:.0f}",
+                 ";".join(f"{k.rsplit('_', 1)[-1]}={v}"
+                          for k, v in gates.items())])
+
+    # the serve loop: inference interleaved with partial_fit
+    engine = PredictionEngine.from_estimator(clf)
+    batcher = MicroBatcher(
+        max_batch=max_batch, max_delay_s=0.001, min_width=min_width
+    )
+    report = run_serve_loop(
+        stream, engine, batcher,
+        classifier=clf, update_every_chunks=update_every,
+        chunk_rows=chunk_rows,
+    )
+    lat = report.latency_percentiles()
+    hist = report.staleness_histogram()
+    # the constructed bound on the compiled-shape universe
+    width_hi = max(w for _, w in report.bucket_counts)
+    shape_bound = (int(math.log2(max_batch)) + 1) * (
+        int(math.log2(width_hi // min_width)) + 1
+    )
+    shapes_bounded = report.compiled_shapes <= shape_bound
+    interleaved = (
+        report.versions_published >= 2
+        and len({r.version_used for r in report.served}) >= 2
+        and hist.get(1, 0) > 0
+    )
+    rows.append([
+        "serve_loop_total", f"{report.total_wall_s * 1e6:.0f}",
+        f"{report.predictions_per_s:.0f}pred/s "
+        f"p50={lat['p50_ms']:.2f}ms p99={lat['p99_ms']:.2f}ms "
+        f"batches={report.num_batches} shapes={report.compiled_shapes} "
+        f"versions={report.versions_published} "
+        f"staleness1={hist.get(1, 0)}",
+    ])
+    rows.append([
+        "serve_engine_compute", f"{report.serve_wall_s * 1e6:.0f}",
+        f"{report.num_requests}req/{report.num_batches}batches "
+        f"causes={report.flush_causes}",
+    ])
+
+    summary = {
+        "traffic": {**cfg, "max_batch": max_batch, "min_width": min_width,
+                    "chunk_rows": chunk_rows,
+                    "update_every_chunks": update_every},
+        "throughput": {
+            "predictions_per_s": report.predictions_per_s,
+            "requests": report.num_requests,
+            "batches": report.num_batches,
+            "serve_wall_s": report.serve_wall_s,
+            "total_wall_s": report.total_wall_s,
+        },
+        "latency_ms": lat,
+        "shapes": {
+            "bucket_counts": {
+                f"{r}x{w}": c for (r, w), c in
+                sorted(report.bucket_counts.items())
+            },
+            "flush_causes": report.flush_causes,
+            "compiled_shapes": report.compiled_shapes,
+            "shape_bound": shape_bound,
+            "shapes_bounded": bool(shapes_bounded),
+        },
+        "staleness": {
+            "versions_published": report.versions_published,
+            "updates_skipped": report.updates_skipped,
+            "histogram": {str(k): v for k, v in sorted(hist.items())},
+            "interleaved": bool(interleaved),
+        },
+        "bitwise": gates,
+    }
+
+    ensure_dir()
+    path = write_csv("serve.csv", ["name", "us_per_call", "derived"], rows)
+    return path, rows, summary
+
+
+def contracts_hold(summary: dict) -> bool:
+    """The certified invariants a CI run gates on."""
+    return (
+        all(summary["bitwise"].values())
+        and summary["shapes"]["shapes_bounded"]
+        and summary["staleness"]["interleaved"]
+    )
+
+
+def report_payload(summary: dict, wall_us: float, quick: bool) -> dict:
+    """The BENCH_serve.json schema — one builder for the standalone and
+    the aggregate (benchmarks.run) entry points."""
+    return {
+        "wall_us": wall_us,
+        "quick": quick,
+        "predictions_per_s": summary["throughput"]["predictions_per_s"],
+        "p50_ms": summary["latency_ms"]["p50_ms"],
+        "p99_ms": summary["latency_ms"]["p99_ms"],
+        "compiled_shapes": summary["shapes"]["compiled_shapes"],
+        "shapes_bounded": summary["shapes"]["shapes_bounded"],
+        "versions_published": summary["staleness"]["versions_published"],
+        "interleaved": summary["staleness"]["interleaved"],
+        "bitwise": summary["bitwise"],
+        "detail": summary,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small traffic (CI smoke mode)")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    path, rows, summary = run(quick=args.quick)
+    payload = report_payload(
+        summary, (time.perf_counter() - t0) * 1e6, args.quick)
+    write_bench_json("serve", payload)
+    print(f"serve: wrote {len(rows)} rows to {path}")
+    for r in rows:
+        print("  ", ",".join(map(str, r)))
+    print(
+        f"  {payload['predictions_per_s']:.0f} pred/s, "
+        f"p50 {payload['p50_ms']:.2f}ms / p99 {payload['p99_ms']:.2f}ms, "
+        f"{payload['compiled_shapes']} compiled shapes "
+        f"(bound {summary['shapes']['shape_bound']}), "
+        f"{payload['versions_published']} versions published"
+    )
+    if not contracts_hold(summary):
+        raise SystemExit(
+            "serve contracts FAILED: "
+            f"bitwise={summary['bitwise']} "
+            f"shapes_bounded={summary['shapes']['shapes_bounded']} "
+            f"interleaved={summary['staleness']['interleaved']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,10 @@
 families, including the SSM/hybrid caches and the audio codebook heads.
 
     PYTHONPATH=src python examples/serve_decode.py
+
+This exercises the LM decode path.  For serving the paper's sparse
+linear classifiers (micro-batched margins + online updates via
+``repro.serve``), see ``examples/serve_linear.py``.
 """
 
 import time

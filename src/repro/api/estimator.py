@@ -36,7 +36,8 @@ from repro.data.pipeline import (
     source_labels,
     streamed_margins,
 )
-from repro.data.sparse import PaddedCSR, margins
+from repro.data.sparse import PaddedCSR
+from repro.serve.engine import batched_margins
 
 
 def _coerce_input(X):
@@ -316,10 +317,12 @@ class FDSVRGClassifier:
         return self
 
     def free_training_cache(self) -> "FDSVRGClassifier":
-        """Release the memoized training data (serving: a fitted estimator
-        keeps only ``coef_``/``classes_``/``history_``).  The next
-        ``partial_fit`` re-encodes from its inputs."""
+        """Release the memoized training data and the inference-input
+        memo (serving: a fitted estimator keeps only
+        ``coef_``/``classes_``/``history_``).  The next ``partial_fit``
+        (or dense-input ``predict``) re-encodes from its inputs."""
         self._encoded = None
+        self._infer_encoded = None
         self.result_ = None
         return self
 
@@ -328,26 +331,48 @@ class FDSVRGClassifier:
             raise ValueError("this FDSVRGClassifier is not fitted yet")
 
     def decision_function(self, X) -> np.ndarray:
-        """Margins ``w^T x_i``; positive means ``classes_[1]``.
+        """Margins ``w^T x_i`` (``[n, k]`` for one-vs-rest models);
+        positive means ``classes_[1]``.
 
         Streamed input (a DataSource or LibSVM path) is scored one chunk
-        at a time — serving never materializes the matrix either.
+        at a time — serving never materializes the matrix; a one-vs-rest
+        model streams the file ONCE for all k columns.  In-memory input
+        runs :func:`repro.serve.engine.batched_margins` — the serving
+        hot path (the Pallas gather kernel when ``use_kernels``), pinned
+        bit-identical to what a :class:`~repro.serve.engine.
+        PredictionEngine` holding ``coef_`` serves for the same rows.
+        Dense ``X`` converts to the padded sparse layout once per input
+        object (identity-memoized like the fit-time data), so
+        ``predict`` → ``score`` on the same matrix converts once.
         """
         self._check_fitted()
-        X = _coerce_input(X)
-        if self.coef_.ndim == 2:
-            # One-vs-rest: a [n, k] margin matrix, one column per class.
-            return np.column_stack(
-                [self._binary_margins(X, w_j) for w_j in self.coef_]
-            )
-        return self._binary_margins(X, self.coef_)
-
-    def _binary_margins(self, X, w) -> np.ndarray:
+        X = self._inference_data(_coerce_input(X))
+        # The engine's [d(, k)] orientation; sklearn's coef_ is [k, d].
+        w = self.coef_.T if self.coef_.ndim == 2 else self.coef_
         if is_source(X):
             return streamed_margins(X, w, chunk_rows=self.ingest_chunk_rows)
-        if isinstance(X, PaddedCSR):
-            return np.asarray(margins(X, jnp.asarray(w)))
-        return np.asarray(X) @ w
+        return batched_margins(
+            X.indices, X.values, jnp.asarray(w), use_kernels=self.use_kernels
+        )
+
+    def _inference_data(self, X):
+        """Sources and PaddedCSRs pass through; a dense matrix converts
+        to PaddedCSR ONCE per input object (the inference twin of the
+        ``_encoded_data`` memo — repeated ``predict``/``score`` calls on
+        the same matrix must not redo the O(n·d) pack)."""
+        if is_source(X) or isinstance(X, PaddedCSR):
+            return X
+        cached = getattr(self, "_infer_encoded", None)
+        if cached is not None and cached[0] is X:
+            return cached[1]
+        arr = np.asarray(X)
+        if arr.ndim != 2:
+            raise ValueError(
+                f"X must be [n_samples, n_features], got {arr.shape}"
+            )
+        data = as_padded_csr(arr, np.zeros(arr.shape[0], dtype=np.float32))
+        self._infer_encoded = (X, data)
+        return data
 
     def predict(self, X) -> np.ndarray:
         self._check_fitted()

@@ -554,15 +554,41 @@ def streamed_margins(
     *,
     chunk_rows: int = DEFAULT_CHUNK_ROWS,
 ) -> np.ndarray:
-    """``w^T x_i`` for every row of ``source``, one chunk at a time."""
+    """``w^T x_i`` for every row of ``source``, one chunk at a time.
+
+    ``w`` is ``[d]`` (returns ``[n]``) or multi-output ``[d, k]``
+    (returns ``[n, k]`` in ONE pass over the source — column ``j`` is
+    computed exactly like the ``k = 1`` call with ``w[:, j]``, so a
+    one-vs-rest model never pays k parse passes over a file)."""
     w = np.asarray(w)
-    parts = [
-        np.einsum("rk,rk->r", w[chunk.indices], chunk.values)
-        for chunk in source.chunks(chunk_rows)
-    ]
-    return (
-        np.concatenate(parts) if parts else np.zeros((0,), dtype=w.dtype)
-    )
+    if w.ndim not in (1, 2):
+        raise ValueError(f"w must be [d] or [d, k], got shape {w.shape}")
+    parts = []
+    for chunk in source.chunks(chunk_rows):
+        if w.ndim == 2:
+            # One gather per column, NOT w[chunk.indices][:, :, j]: einsum
+            # over a strided column slice reduces in a different order
+            # than over the contiguous gather the k = 1 path sees, and
+            # the per-column bit contract would quietly break.
+            parts.append(
+                np.stack(
+                    [
+                        np.einsum(
+                            "rk,rk->r", w[:, j][chunk.indices], chunk.values
+                        )
+                        for j in range(w.shape[1])
+                    ],
+                    axis=1,
+                )
+            )
+        else:
+            parts.append(
+                np.einsum("rk,rk->r", w[chunk.indices], chunk.values)
+            )
+    if parts:
+        return np.concatenate(parts)
+    shape = (0,) if w.ndim == 1 else (0, w.shape[1])
+    return np.zeros(shape, dtype=w.dtype)
 
 
 def source_labels(

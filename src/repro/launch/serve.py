@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b \
         --reduced --batch 4 --prompt-len 32 --gen 16
+
+This is the LM-side serving scaffold (token decode against the
+transformer/SSM stacks).  Serving for the paper's *linear classifiers*
+— batched sparse margins with online ``partial_fit`` interleaving —
+lives in :mod:`repro.serve` (see ``examples/serve_linear.py``).
 """
 
 from __future__ import annotations

@@ -1,0 +1,48 @@
+"""repro.serve — the inference half of the system.
+
+Training (``repro.api.solve`` / ``FDSVRGClassifier``) produces a linear
+model ``w ∈ R^d`` (or ``R^{d×k}`` one-vs-rest).  This package serves it
+at traffic scale and keeps it learning while it serves:
+
+* :class:`~repro.serve.engine.PredictionEngine` — holds a *versioned,
+  frozen* :class:`~repro.serve.engine.WeightSnapshot` (dense ``w`` or
+  per-worker feature blocks) and computes request-batch margins through
+  the same Pallas ``sparse_margin`` gather kernel the training hot path
+  uses (jnp reference off-kernel) — bit-identical to
+  ``FDSVRGClassifier.decision_function`` on the same rows.
+* :class:`~repro.serve.batching.MicroBatcher` — maps arbitrary sparse
+  requests onto a *bounded* set of compiled shapes (power-of-two nnz and
+  row buckets) with a deadline-based flush, so tail latency is capped
+  and recompiles are a metered quantity.
+* :func:`~repro.serve.loop.run_serve_loop` — interleaves inference
+  traffic with streaming ``partial_fit`` updates: snapshots swap
+  atomically under a monotone version counter, batches pin the snapshot
+  they were flushed against, and per-request staleness (latest published
+  version minus the pinned version at serve time) is recorded.
+
+``benchmarks/serve_bench.py`` → ``BENCH_serve.json`` measures the whole
+path; ``examples/serve_linear.py`` is the quickstart.  (The seed's LM
+prefill/decode demo lives on in :mod:`repro.launch.serve`.)
+"""
+
+from repro.serve.batching import Batch, MicroBatcher, Request, bucket_width
+from repro.serve.engine import PredictionEngine, WeightSnapshot
+from repro.serve.loop import (
+    ServedRequest,
+    ServeReport,
+    run_serve_loop,
+    synthetic_request_source,
+)
+
+__all__ = [
+    "Batch",
+    "MicroBatcher",
+    "PredictionEngine",
+    "Request",
+    "ServeReport",
+    "ServedRequest",
+    "WeightSnapshot",
+    "bucket_width",
+    "run_serve_loop",
+    "synthetic_request_source",
+]

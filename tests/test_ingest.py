@@ -331,6 +331,66 @@ def test_source_labels_and_as_source_coercion(tmp_path):
         as_source(42)
 
 
+@pytest.mark.parametrize("chunk_rows", [1, 5, 12, 36, 100])
+def test_streamed_helpers_chunk_boundaries(chunk_rows):
+    """Chunk size must be invisible: chunk_rows=1, an exact divisor of N
+    (empty tail), and chunk_rows > N all give the same answers."""
+    data = _data(n=36, seed=21)  # 36 rows: 12 and 36 divide exactly
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=data.dim).astype(np.float32)
+    np.testing.assert_array_equal(
+        streamed_margins(ArraySource(data), w, chunk_rows=chunk_rows),
+        streamed_margins(ArraySource(data), w, chunk_rows=36),
+    )
+    np.testing.assert_array_equal(
+        source_labels(ArraySource(data), chunk_rows=chunk_rows),
+        np.asarray(data.labels),
+    )
+
+
+def test_streamed_margins_multioutput_matches_per_column():
+    """[d, k] weights stream in ONE pass, each column bit-identical to
+    the k = 1 call with that column."""
+    data = _data(seed=23)
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(data.dim, 3)).astype(np.float32)
+    got = streamed_margins(ArraySource(data), w, chunk_rows=7)
+    assert got.shape == (37, 3)
+    for j in range(3):
+        np.testing.assert_array_equal(
+            got[:, j],
+            streamed_margins(ArraySource(data), w[:, j], chunk_rows=7),
+        )
+    with pytest.raises(ValueError, match=r"\[d\] or \[d, k\]"):
+        streamed_margins(ArraySource(data), w[None], chunk_rows=7)
+
+
+def test_streamed_margins_empty_source():
+    empty = PaddedCSR(
+        indices=np.zeros((0, 4), np.int32),
+        values=np.zeros((0, 4), np.float32),
+        labels=np.zeros((0,), np.float32),
+        dim=11,
+    )
+    w = np.ones(11, np.float32)
+    assert streamed_margins(ArraySource(empty), w).shape == (0,)
+    w2 = np.ones((11, 2), np.float32)
+    assert streamed_margins(ArraySource(empty), w2).shape == (0, 2)
+    assert source_labels(ArraySource(empty)).shape == (0,)
+
+
+def test_libsvm_dim_override_too_small_is_one_line_error(tmp_path):
+    data = _data(seed=4)
+    path = str(tmp_path / "d.libsvm")
+    write_libsvm(path, data)
+    max_id = int(np.asarray(data.indices).max())
+    with pytest.raises(ValueError, match=f"feature id {max_id}") as exc:
+        LibSVMSource(path, dim=max_id).stats()
+    assert "\n" not in str(exc.value)
+    # and the boundary value (max id + 1) is accepted
+    assert LibSVMSource(path, dim=max_id + 1).stats().dim == max_id + 1
+
+
 if HAS_HYPOTHESIS:
     from hypothesis import given, settings, strategies as st
 

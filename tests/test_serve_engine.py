@@ -1,0 +1,451 @@
+"""`repro.serve` — engine/batcher/loop contracts.
+
+The load-bearing assertions:
+
+* engine margins are BIT-identical to ``FDSVRGClassifier.
+  decision_function`` on the same rows — across snapshot forms
+  (dense / per-worker blocks), ``use_kernels`` on/off, and ``k > 1``;
+* the batcher maps arbitrary-nnz requests onto the bounded power-of-two
+  shape universe and its padding is bit-inert (round-trip through a
+  flushed batch serves the same bits as scoring the row alone);
+* the serve loop's snapshot/version/staleness contract: publishes are
+  monotone and atomic, batches pin the snapshot they flushed against,
+  and every served margin is reproducible from the version it reports.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import FDSVRGClassifier
+from repro.core.partition import balanced
+from repro.data.sparse import PaddedCSR
+from repro.serve import (
+    MicroBatcher,
+    PredictionEngine,
+    WeightSnapshot,
+    bucket_width,
+    run_serve_loop,
+    synthetic_request_source,
+)
+from repro.serve.engine import batched_margins
+
+pytestmark = pytest.mark.serve
+
+
+def _fit_binary(data, *, use_kernels=False, **kw):
+    kw.setdefault("method", "serial")
+    kw.setdefault("eta", 0.3)
+    kw.setdefault("lam", 1e-3)
+    kw.setdefault("inner_steps", 16)
+    kw.setdefault("outer_iters", 2)
+    clf = FDSVRGClassifier(use_kernels=use_kernels, **kw)
+    clf.fit(data)
+    return clf
+
+
+@pytest.fixture(scope="module")
+def stream():
+    return synthetic_request_source(
+        dim=256, num_requests=300, nnz_lo=2, nnz_hi=16, seed=0
+    )
+
+
+@pytest.fixture(scope="module")
+def data(stream):
+    return stream.materialize()
+
+
+# ---------------------------------------------------------------------------
+# engine == decision_function (the tentpole bit contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_engine_bitwise_matches_decision_function(data, use_kernels):
+    clf = _fit_binary(data, use_kernels=use_kernels)
+    engine = PredictionEngine.from_estimator(clf, use_kernels=use_kernels)
+    got = engine.margins(data.indices, data.values)
+    want = clf.decision_function(data)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_engine_kernel_and_ref_paths_agree_bitwise(data):
+    clf = _fit_binary(data)
+    ref = PredictionEngine.from_estimator(clf, use_kernels=False)
+    krn = PredictionEngine.from_estimator(clf, use_kernels=True)
+    np.testing.assert_array_equal(
+        ref.margins(data.indices, data.values),
+        krn.margins(data.indices, data.values),
+    )
+
+
+@pytest.mark.parametrize("q", [2, 4, 7])
+def test_block_snapshot_serves_identically_to_dense(data, q):
+    clf = _fit_binary(data)
+    dense = PredictionEngine.from_estimator(clf)
+    w = np.asarray(clf.coef_)
+    part = balanced(data.dim, q)
+    blocks = [w[lo:hi] for lo, hi in (part.block(l) for l in range(q))]
+    blocked = PredictionEngine(WeightSnapshot.from_blocks(blocks, 0))
+    np.testing.assert_array_equal(
+        dense.margins(data.indices, data.values),
+        blocked.margins(data.indices, data.values),
+    )
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_multioutput_engine_bitwise_matches_decision_function(use_kernels):
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(90, 40)) * (rng.random((90, 40)) < 0.3)
+    y = rng.integers(0, 3, size=90)
+    # multi-output TRAINING is jnp-only; kernels are an inference-side
+    # choice, so fit without and flip the flag for serving
+    clf = FDSVRGClassifier(method="serial", eta=0.4, lam=1e-4,
+                           inner_steps=32, outer_iters=3)
+    clf.fit(X, y)
+    clf.use_kernels = use_kernels
+    assert clf.coef_.shape == (3, 40)
+    engine = PredictionEngine.from_estimator(clf, use_kernels=use_kernels)
+    Xp = clf._inference_data(X)
+    got = engine.margins(Xp.indices, Xp.values)
+    want = clf.decision_function(X)
+    assert got.shape == (90, 3)
+    np.testing.assert_array_equal(got, want)
+    # block-published multi-output snapshot serves the same bits
+    w = np.asarray(clf.coef_).T  # [d, k]
+    part = balanced(40, 3)
+    blocks = [w[lo:hi] for lo, hi in (part.block(l) for l in range(3))]
+    blocked = PredictionEngine(
+        WeightSnapshot.from_blocks(blocks, 0), use_kernels=use_kernels
+    )
+    np.testing.assert_array_equal(
+        blocked.margins(Xp.indices, Xp.values), want
+    )
+
+
+def test_empty_batch_margins(data):
+    clf = _fit_binary(data)
+    engine = PredictionEngine.from_estimator(clf)
+    out = engine.margins(
+        np.zeros((0, 8), np.int32), np.zeros((0, 8), np.float32)
+    )
+    assert out.shape == (0,)
+
+
+def test_batched_margins_validates_shapes():
+    w = np.ones(8, np.float32)
+    with pytest.raises(ValueError, match="matching"):
+        batched_margins(np.zeros((2, 3), np.int32),
+                        np.zeros((2, 4), np.float32), w)
+    with pytest.raises(ValueError, match=r"\[d\] or \[d, k\]"):
+        batched_margins(np.zeros((2, 3), np.int32),
+                        np.zeros((2, 3), np.float32),
+                        np.ones((2, 2, 2), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# snapshots: versioning, publish semantics
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_publish_is_monotone(data):
+    clf = _fit_binary(data)
+    engine = PredictionEngine.from_estimator(clf)  # version 0
+    w = engine.snapshot.w
+    prev = engine.publish(WeightSnapshot(w=w * 2, version=3))
+    assert prev.version == 0 and engine.version == 3
+    with pytest.raises(ValueError, match="not newer"):
+        engine.publish(WeightSnapshot(w=w, version=3))
+    with pytest.raises(ValueError, match="not newer"):
+        engine.publish(WeightSnapshot(w=w, version=1))
+    with pytest.raises(ValueError, match="dim"):
+        engine.publish(WeightSnapshot(w=w[:-1], version=9))
+    assert engine.version == 3  # failed publishes change nothing
+
+
+def test_engine_without_snapshot_raises():
+    engine = PredictionEngine()
+    with pytest.raises(ValueError, match="no snapshot"):
+        engine.margins(np.zeros((1, 4), np.int32), np.zeros((1, 4), np.float32))
+
+
+def test_snapshot_constructors_validate():
+    with pytest.raises(ValueError, match=r"\[d\] or \[d, k\]"):
+        WeightSnapshot(w=jnp.ones((2, 2, 2)), version=0)
+    with pytest.raises(ValueError, match="at least one"):
+        WeightSnapshot.from_blocks([], version=0)
+    with pytest.raises(ValueError, match="ndims"):
+        WeightSnapshot.from_blocks([jnp.ones(3), jnp.ones((3, 2))], version=0)
+    snap = WeightSnapshot.from_blocks([jnp.ones((3, 2)), jnp.ones((5, 2))], 1)
+    assert snap.dim == 8 and snap.num_outputs == 2 and snap.version == 1
+
+
+def test_snapshot_from_estimator_orientation(data):
+    clf = _fit_binary(data)
+    snap = WeightSnapshot.from_estimator(clf, 7)
+    assert snap.w.ndim == 1 and snap.dim == data.dim and snap.version == 7
+
+
+# ---------------------------------------------------------------------------
+# batcher: buckets, deadlines, padding
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_width_powers_of_two():
+    assert [bucket_width(n) for n in (0, 1, 8, 9, 16, 17, 100)] == \
+        [8, 8, 8, 16, 16, 32, 128]
+    assert bucket_width(3, min_width=1) == 4
+    with pytest.raises(ValueError):
+        bucket_width(-1)
+
+
+def test_batcher_full_flush_and_row_padding():
+    clock = [0.0]
+    b = MicroBatcher(max_batch=4, max_delay_s=10.0, min_width=4,
+                     clock=lambda: clock[0])
+    for i in range(4):
+        b.submit([1, 2], [1.0, float(i)])
+    batches = b.ready()
+    assert len(batches) == 1 and batches[0].cause == "full"
+    assert batches[0].shape == (4, 4) and batches[0].n_valid == 4
+    # three requests deadline-flush into a pow2 row bucket of 4
+    for i in range(3):
+        b.submit([5], [2.0])
+    assert b.ready() == []  # not full, deadline not reached
+    clock[0] = 11.0
+    (batch,) = b.ready()
+    assert batch.cause == "deadline" and batch.shape == (4, 4)
+    assert batch.n_valid == 3
+    np.testing.assert_array_equal(batch.values[3], np.zeros(4))
+    assert b.pending == 0
+
+
+def test_batcher_routes_by_width_bucket():
+    b = MicroBatcher(max_batch=8, max_delay_s=0.0, min_width=4)
+    b.submit(np.arange(3), np.ones(3))     # width 4
+    b.submit(np.arange(6), np.ones(6))     # width 8
+    b.submit(np.arange(4), np.ones(4))     # width 4
+    batches = b.ready()
+    assert sorted(bb.shape for bb in batches) == [(1, 8), (2, 4)]
+    assert {bb.cause for bb in batches} == {"deadline"}
+
+
+def test_batcher_drain_and_shape_universe():
+    b = MicroBatcher(max_batch=16, max_delay_s=1e9, min_width=4)
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        nnz = int(rng.integers(1, 40))
+        b.submit(rng.integers(0, 99, nnz), rng.normal(size=nnz))
+    batches = b.drain()
+    assert b.pending == 0
+    assert all(bb.cause == "drain" for bb in batches)
+    # every shape is (pow2 rows <= max_batch, pow2 width >= min_width)
+    for rows, width in b.bucket_counts:
+        assert rows & (rows - 1) == 0 and rows <= 16
+        assert width & (width - 1) == 0 and width >= 4
+    assert sum(bb.n_valid for bb in batches) == 200
+
+
+def test_batcher_padding_round_trips_bits(data):
+    """A row scored through a flushed (row- and width-padded) batch
+    serves the same bits as the row scored alone at the bucket width —
+    padding is representation, not data."""
+    clf = _fit_binary(data)
+    engine = PredictionEngine.from_estimator(clf)
+    b = MicroBatcher(max_batch=8, max_delay_s=0.0, min_width=4)
+    idx = np.asarray(data.indices)
+    val = np.asarray(data.values)
+    reqs = []
+    for r in range(20):
+        m = val[r] != 0.0
+        reqs.append((idx[r, m], val[r, m]))
+        b.submit(idx[r, m], val[r, m])
+    served = {}
+    for batch in b.ready() + b.drain():
+        out = engine.margins(batch.indices, batch.values)
+        for i, req in enumerate(batch.requests):
+            served[req.req_id] = out[i]
+    for rid, (ri, rv) in enumerate(reqs):
+        width = bucket_width(len(ri), min_width=4)
+        pi = np.zeros((1, width), np.int32)
+        pv = np.zeros((1, width), np.float32)
+        pi[0, : len(ri)] = ri
+        pv[0, : len(rv)] = rv
+        alone = engine.margins(pi, pv)[0]
+        np.testing.assert_array_equal(served[rid], alone)
+
+
+def test_batcher_validation():
+    with pytest.raises(ValueError, match="power of two"):
+        MicroBatcher(max_batch=6)
+    with pytest.raises(ValueError, match="power of two"):
+        MicroBatcher(min_width=3)
+    b = MicroBatcher()
+    with pytest.raises(ValueError, match="mismatch"):
+        b.submit([1, 2], [1.0])
+
+
+def test_engine_compiled_shape_metering(data):
+    clf = _fit_binary(data)
+    engine = PredictionEngine.from_estimator(clf)
+    i8 = np.zeros((4, 8), np.int32)
+    v8 = np.zeros((4, 8), np.float32)
+    engine.margins(i8, v8)
+    engine.margins(i8, v8)  # same shape: no new compile
+    assert len(engine.compiled_shapes) == 1
+    engine.margins(np.zeros((4, 16), np.int32), np.zeros((4, 16), np.float32))
+    engine.margins(np.zeros((8, 8), np.int32), np.zeros((8, 8), np.float32))
+    assert len(engine.compiled_shapes) == 3
+    assert engine.batches_served == 4 and engine.rows_served == 20
+
+
+# ---------------------------------------------------------------------------
+# the serve loop: interleaved partial_fit, version swaps, staleness
+# ---------------------------------------------------------------------------
+
+
+def _warmup(stream, n=128, **kw):
+    data = stream.materialize()
+    warm = PaddedCSR(
+        indices=data.indices[:n], values=data.values[:n],
+        labels=data.labels[:n], dim=data.dim,
+    )
+    return _fit_binary(warm, **kw)
+
+
+def test_serve_loop_interleaves_updates(stream):
+    clf = _warmup(stream, inner_steps=8, outer_iters=1)
+    engine = PredictionEngine.from_estimator(clf)
+    # record every published weight vector so each served margin can be
+    # replayed against the exact version it reports
+    published = {0: np.asarray(engine.snapshot.w)}
+    orig_publish = engine.publish
+
+    def recording_publish(snap):
+        published[snap.version] = np.asarray(snap.w)
+        return orig_publish(snap)
+
+    engine.publish = recording_publish
+    batcher = MicroBatcher(max_batch=32, max_delay_s=0.0, min_width=4)
+    report = run_serve_loop(
+        stream, engine, batcher,
+        classifier=clf, update_every_chunks=2, chunk_rows=50,
+    )
+    # every request served exactly once
+    assert report.num_requests == 300
+    assert sorted(r.req_id for r in report.served) == list(range(300))
+    # the version counter advanced mid-stream (not just at the end):
+    # requests were served at more than one version
+    assert report.versions_published >= 2
+    versions_used = {r.version_used for r in report.served}
+    assert len(versions_used) >= 2
+    # staleness: batches flushed before an update and served after it
+    # report staleness 1; others 0.  Both must occur.
+    hist = report.staleness_histogram()
+    assert set(hist) == {0, 1} and hist[0] > 0 and hist[1] > 0
+    assert report.num_batches == sum(report.bucket_counts.values())
+    assert report.compiled_shapes >= 1
+    lat = report.latency_percentiles()
+    assert 0 <= lat["p50_ms"] <= lat["p99_ms"]
+
+
+def test_serve_loop_served_margins_reflect_the_swap(stream):
+    """Each served margin is bit-reproducible from the weight version its
+    record claims — old-version batches really used the old snapshot,
+    post-swap batches really used the new one."""
+    clf = _warmup(stream, inner_steps=8, outer_iters=1)
+    engine = PredictionEngine.from_estimator(clf)
+    published = {0: np.asarray(engine.snapshot.w)}
+    orig_publish = engine.publish
+
+    def recording_publish(snap):
+        published[snap.version] = np.asarray(snap.w)
+        return orig_publish(snap)
+
+    engine.publish = recording_publish
+    batcher = MicroBatcher(max_batch=32, max_delay_s=0.0, min_width=4)
+    report = run_serve_loop(
+        stream, engine, batcher,
+        classifier=clf, update_every_chunks=2, chunk_rows=50,
+    )
+    # the model really changed across versions
+    assert not np.array_equal(published[0], published[max(published)])
+    data = stream.materialize()
+    idx = np.asarray(data.indices)
+    val = np.asarray(data.values)
+    checked_versions = set()
+    for r in report.served:
+        m = val[r.req_id] != 0.0
+        ri, rv = idx[r.req_id, m], val[r.req_id, m]
+        width = bucket_width(len(ri), min_width=4)
+        pi = np.zeros((1, width), np.int32)
+        pv = np.zeros((1, width), np.float32)
+        pi[0, : len(ri)] = ri
+        pv[0, : len(rv)] = rv
+        want = batched_margins(pi, pv, jnp.asarray(published[r.version_used]))
+        np.testing.assert_array_equal(np.asarray(r.margin), want[0])
+        checked_versions.add(r.version_used)
+    assert len(checked_versions) >= 2
+
+
+def test_serve_loop_pure_inference(stream):
+    clf = _warmup(stream)
+    engine = PredictionEngine.from_estimator(clf)
+    batcher = MicroBatcher(max_batch=64, max_delay_s=0.0, min_width=4)
+    report = run_serve_loop(stream, engine, batcher, chunk_rows=64)
+    assert report.versions_published == 0
+    assert report.staleness_histogram() == {0: 300}
+    assert {r.version_used for r in report.served} == {0}
+    # margins() reassembles request order == decision_function row order
+    # up to bucket re-padding (exact here: nnz <= 16 stays in the exact-
+    # reassociation regime — see the engine docstring)
+    np.testing.assert_array_equal(
+        report.margins(), clf.decision_function(stream.materialize())
+    )
+
+
+def test_serve_loop_guards(stream):
+    unfitted = FDSVRGClassifier()
+    clf = _warmup(stream)
+    engine = PredictionEngine.from_estimator(clf)
+    with pytest.raises(ValueError, match="fitted"):
+        run_serve_loop(stream, engine, MicroBatcher(), classifier=unfitted)
+    small = PredictionEngine(WeightSnapshot.from_dense(np.ones(7), 0))
+    with pytest.raises(ValueError, match="dim"):
+        run_serve_loop(stream, small, MicroBatcher())
+
+
+def test_synthetic_request_source_validates():
+    with pytest.raises(ValueError, match="nnz_lo"):
+        synthetic_request_source(dim=8, num_requests=4, nnz_lo=5, nnz_hi=3)
+
+
+# ---------------------------------------------------------------------------
+# estimator inference memo (the repeated-conversion fix)
+# ---------------------------------------------------------------------------
+
+
+def test_dense_inference_converts_once_and_matches_sparse_path():
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(40, 30)) * (rng.random((40, 30)) < 0.4)
+    y = (X @ rng.normal(size=30) > 0).astype(int)
+    clf = FDSVRGClassifier(method="serial", eta=0.4, lam=1e-4,
+                           inner_steps=16, outer_iters=2)
+    clf.fit(X, y)
+    df = clf.decision_function(X)
+    converted = clf._infer_encoded[1]
+    clf.predict(X)
+    clf.score(X, y)
+    # predict -> score reused ONE conversion
+    assert clf._infer_encoded[1] is converted
+    # and the dense path is the PaddedCSR path (bitwise)
+    np.testing.assert_array_equal(df, clf.decision_function(converted))
+    # a different matrix re-converts
+    X2 = X.copy()
+    clf.decision_function(X2)
+    assert clf._infer_encoded[0] is X2
+    # free_training_cache releases the inference memo too
+    clf.free_training_cache()
+    assert clf._infer_encoded is None
